@@ -1,0 +1,94 @@
+"""Checkpoint data-path performance — the paper's own technique, measured
+as real wall time (this is CPU-measurable, unlike the TPU roofline):
+
+  * blocking save/restore throughput per codec (raw / zlib / int8+zlib);
+  * async checkpointing: training-step overhead with a save in flight
+    (the device->host staging is the only synchronous part);
+  * two-tier store: time-to-commit (local) vs time-to-durable (remote).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit
+from repro.ckpt import (AsyncCheckpointer, InMemoryStore, TwoTierStore,
+                        restore, save_checkpoint)
+from repro.configs import get_config, reduced
+from repro.train import AdamWConfig, TrainerApp
+
+
+def _state_mb(tree) -> float:
+    return sum(np.asarray(x).nbytes for x in jax.tree.leaves(tree)) / 1e6
+
+
+def run() -> None:
+    cfg = dataclasses.replace(reduced(get_config("internlm2-1.8b")),
+                              dtype="float32",
+                              d_model=256, n_layers=8, d_ff=1024,
+                              vocab_size=8192)
+    app = TrainerApp(cfg, global_batch=2, seq_len=64, n_steps=10_000)
+    app.start(None, None)
+    while app.current_step < 2:            # warm up jit
+        time.sleep(0.05)
+
+    state = app.checkpoint_state()
+    mb = _state_mb(state)
+    emit("ckpt_path", "state", "mb", mb)
+
+    # --- codec throughput (blocking) -----------------------------------
+    for codec in ("raw", "zlib", "int8+zlib"):
+        store = InMemoryStore()
+        t0 = time.monotonic()
+        save_checkpoint(store, "x", 1, state, codec=codec)
+        dt = time.monotonic() - t0
+        emit("ckpt_path", f"codec={codec}", "save_s", dt)
+        emit("ckpt_path", f"codec={codec}", "stored_mb",
+             store.total_bytes() / 1e6)
+        t0 = time.monotonic()
+        restore(store, "x")
+        emit("ckpt_path", f"codec={codec}", "restore_s",
+             time.monotonic() - t0)
+
+    # --- async overlap: step time with save in flight -------------------
+    def mean_step(n=12):
+        k0 = len(app.step_times)
+        while len(app.step_times) < k0 + n:
+            time.sleep(0.01)
+        return float(np.median(app.step_times[k0:k0 + n]))
+
+    base = mean_step()
+    slow_remote = InMemoryStore(bandwidth_bps=200e6)   # slow "Ceph"
+    ck = AsyncCheckpointer(slow_remote, "x", codec="raw")
+    t0 = time.monotonic()
+    ck.save(1, app.checkpoint_state())
+    staged_s = time.monotonic() - t0                   # sync staging only
+    during = mean_step()
+    ck.wait()
+    emit("ckpt_path", "async", "staging_s", staged_s)
+    emit("ckpt_path", "async", "step_s_baseline", base)
+    emit("ckpt_path", "async", "step_s_during_save", during)
+    emit("ckpt_path", "async", "overhead_pct",
+         100.0 * (during - base) / base)
+
+    # --- two-tier: commit vs durable -------------------------------------
+    local = InMemoryStore(bandwidth_bps=4e9)
+    remote = InMemoryStore(bandwidth_bps=200e6, latency_s=0.002)
+    tt = TwoTierStore(local, remote)
+    snap = app.checkpoint_state()
+    t0 = time.monotonic()
+    save_checkpoint(tt, "y", 1, snap)                  # flush()es remote
+    durable_s = time.monotonic() - t0
+    t0 = time.monotonic()
+    for k in local.list("y"):
+        pass
+    direct = InMemoryStore(bandwidth_bps=4e9)
+    t0 = time.monotonic()
+    save_checkpoint(direct, "y", 1, snap)
+    local_only_s = time.monotonic() - t0
+    emit("ckpt_path", "two_tier", "local_commit_s", local_only_s)
+    emit("ckpt_path", "two_tier", "durable_s", durable_s)
+    app.stop()

@@ -1,0 +1,80 @@
+"""Shared benchmark plumbing.
+
+Every benchmark exercises the REAL system code paths (service, managers,
+stores, monitor) against the cluster simulator with TIME_SCALE-compressed
+latencies — the paper's minutes become sub-second wall-clock while keeping
+every curve's *shape* (saturation points, log scaling, contention jitter).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List
+
+import numpy as np
+
+from repro.core.application import AppContext, SimulatedApp
+
+CSV_ROWS: List[str] = []
+
+
+def emit(bench: str, param: str, metric: str, value: float) -> None:
+    row = f"{bench},{param},{metric},{value:.6g}"
+    CSV_ROWS.append(row)
+    print(row, flush=True)
+
+
+class DistributedSimApp(SimulatedApp):
+    """SimulatedApp whose checkpoint state is split across n per-VM shards
+    (the paper's NAS-LU weak-scaling setup: fixed total problem size, so
+    per-process images shrink as 1/n — Table 2)."""
+
+    def __init__(self, n_procs: int, total_mb: float, smooth: bool = True,
+                 **kw):
+        super().__init__(state_mb=0.001, **kw)
+        self.n_procs = n_procs
+        per = int(total_mb * 1024 * 1024 / 8 / n_procs)
+        rng = np.random.Generator(np.random.PCG64(0))
+        if smooth:   # solver-field-like data: compressible, like real state
+            self.shards = [np.cumsum(rng.standard_normal(per) * 1e-3)
+                           for _ in range(n_procs)]
+        else:
+            self.shards = [rng.standard_normal(per) for _ in range(n_procs)]
+
+    def checkpoint_state(self) -> Dict[str, Any]:
+        base = super().checkpoint_state()
+        return {**base, **{f"proc{i:03d}": s
+                           for i, s in enumerate(self.shards)}}
+
+
+def wait_until(pred, timeout: float = 60.0, interval: float = 0.005) -> None:
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return
+        time.sleep(interval)
+    raise TimeoutError("condition not met")
+
+
+class Sampler:
+    """Background sampler of store/backend counters (Fig 4a/4b, Fig 5)."""
+
+    def __init__(self, fn, interval_s: float = 0.05):
+        self.fn = fn
+        self.interval_s = interval_s
+        self.samples: List[tuple] = []
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._t0 = time.monotonic()
+
+    def _run(self):
+        while not self._stop.wait(self.interval_s):
+            self.samples.append((time.monotonic() - self._t0, self.fn()))
+
+    def __enter__(self):
+        self._thread.start()
+        return self
+
+    def __exit__(self, *a):
+        self._stop.set()
+        self._thread.join(timeout=2)

@@ -1,0 +1,60 @@
+"""Fig 3 — scalability with application size (1..128 VMs, Snooze).
+
+Measures the paper's three phases through the real service:
+  3a  submission = VM allocation (IaaS) + provisioning (CACS, SSH-capped)
+  3b  checkpoint = per-VM local write (parallel) + shared-link upload
+  3c  restart    = parallel download over the shared link (jitter at scale)
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import DistributedSimApp, emit, wait_until
+from repro.ckpt.storage import InMemoryStore, TwoTierStore
+from repro.clusters import SnoozeBackend
+from repro.core import ASR, CACSService, CheckpointPolicy, CoordState
+
+TOTAL_MB = 16.0          # scaled NAS-LU class C aggregate image size
+NODE_COUNTS = (1, 2, 4, 8, 16, 32, 64, 128)
+
+
+def run() -> None:
+    for n in NODE_COUNTS:
+        backend = SnoozeBackend(n_hosts=128)
+        local = InMemoryStore(bandwidth_bps=4e9)              # local SSD tier
+        remote = InMemoryStore(latency_s=0.001, bandwidth_bps=1e9,
+                               shared_link=True)              # shared Ceph
+        store = TwoTierStore(local, remote)
+        svc = CACSService({"snooze": backend}, {"default": store},
+                          start_daemons=False)
+        asr = ASR(name=f"lu-{n}", n_vms=n, backend="snooze",
+                  app_factory=lambda n=n: DistributedSimApp(
+                      n, TOTAL_MB, iter_time_s=1.0),
+                  policy=CheckpointPolicy(period_s=0, keep_last=0))
+
+        t0 = time.monotonic()
+        cid = svc.submit(asr)
+        svc.wait_for_state(cid, CoordState.RUNNING, timeout=120)
+        submit_s = time.monotonic() - t0
+        coord = svc.db.get(cid)
+        # split allocation vs provisioning from the state history
+        hist = {s: t for t, s, *_ in coord.history}
+        alloc_s = hist["PROVISIONING"] - hist["CREATING"]
+        prov_s = hist["READY"] - hist["PROVISIONING"]
+
+        t0 = time.monotonic()
+        step = svc.trigger_checkpoint(cid, blocking=True)
+        store.flush()
+        ckpt_s = time.monotonic() - t0
+
+        t0 = time.monotonic()
+        svc.restart_from(cid, step)
+        restart_s = time.monotonic() - t0
+
+        emit("fig3a", f"n={n}", "submission_s", submit_s)
+        emit("fig3a", f"n={n}", "alloc_s", alloc_s)
+        emit("fig3a", f"n={n}", "provision_s", prov_s)
+        emit("fig3b", f"n={n}", "checkpoint_s", ckpt_s)
+        emit("fig3c", f"n={n}", "restart_s", restart_s)
+        svc.shutdown()
+        store.close()

@@ -1,0 +1,67 @@
+"""Fig 5 — migration of 40 applications between two clouds
+(CACS-Snooze -> CACS-OpenStack), sharing one Ceph-like store.
+
+Reports the three phases the paper plots: submission plateau, the 2.5-minute
+(scaled) migration burst, and the doubled-running plateau; plus network
+bytes through the shared store during the burst.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import time
+
+from benchmarks.common import Sampler, emit, wait_until
+from repro.ckpt.storage import InMemoryStore
+from repro.clusters import OpenStackBackend, SnoozeBackend
+from repro.core import (ASR, CACSService, CheckpointPolicy, CoordState,
+                        SimulatedApp, clone)
+
+N_APPS = 40
+
+
+def run() -> None:
+    shared = InMemoryStore()                       # single Ceph instance
+    svc_src = CACSService({"snooze": SnoozeBackend(64)},
+                          {"default": shared})
+    svc_dst = CACSService({"openstack": OpenStackBackend(64)},
+                          {"default": shared})
+
+    ids = []
+    t0 = time.monotonic()
+    for i in range(N_APPS):
+        asr = ASR(name=f"dmtcp1-{i}", n_vms=1, backend="snooze",
+                  app_factory=lambda: SimulatedApp(iter_time_s=1.0,
+                                                   state_mb=0.003),
+                  policy=CheckpointPolicy(period_s=0.6, keep_last=1))
+        ids.append(svc_src.submit(asr))
+    wait_until(lambda: all(svc_src.db.get(i).state == CoordState.RUNNING
+                           for i in ids), timeout=120)
+    emit("fig5", "phase=submit", "all_running_s", time.monotonic() - t0)
+
+    bytes_before = shared.bytes_in
+    t0 = time.monotonic()
+    results = []
+    with cf.ThreadPoolExecutor(max_workers=8) as pool:
+        futs = [pool.submit(clone, svc_src, cid, svc_dst,
+                            backend="openstack") for cid in ids]
+        for f in futs:
+            results.append(f.result())
+    migrate_s = time.monotonic() - t0
+    emit("fig5", "phase=migrate", "wall_s", migrate_s)
+    emit("fig5", "phase=migrate", "mean_ckpt_s",
+         sum(r.checkpoint_s for r in results) / len(results))
+    emit("fig5", "phase=migrate", "mean_transfer_s",
+         sum(r.transfer_s for r in results) / len(results))
+    emit("fig5", "phase=migrate", "mean_restart_s",
+         sum(r.restart_s for r in results) / len(results))
+    emit("fig5", "phase=migrate", "store_mb_moved",
+         (shared.bytes_in - bytes_before) / 1e6)
+
+    running_src = sum(1 for i in ids
+                      if svc_src.db.get(i).state == CoordState.RUNNING)
+    running_dst = sum(1 for r in results
+                      if svc_dst.db.get(r.dst_id).state == CoordState.RUNNING)
+    emit("fig5", "phase=after", "running_total", running_src + running_dst)
+    assert running_src + running_dst == 2 * N_APPS, "both copies must run"
+    svc_src.shutdown()
+    svc_dst.shutdown()

@@ -1,0 +1,55 @@
+"""Benchmark driver — one module per paper table/figure.
+
+Prints ``bench,param,metric,value`` CSV rows (collected in
+benchmarks/common.CSV_ROWS). All benchmarks run the real CACS code paths
+against the cluster simulator (TIME_SCALE-compressed latencies).
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--only fig3,fig5]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+ALL = ("fig3", "table2", "fig4", "fig5", "fig6", "ckpt_path")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of " + ",".join(ALL))
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else set(ALL)
+
+    from benchmarks import (ckpt_path, fig3_scalability, fig4_service_load,
+                            fig5_migration, fig6_backends, table2_image_size)
+
+    modules = {
+        "fig3": fig3_scalability,
+        "table2": table2_image_size,
+        "fig4": fig4_service_load,
+        "fig5": fig5_migration,
+        "fig6": fig6_backends,
+        "ckpt_path": ckpt_path,
+    }
+    print("bench,param,metric,value")
+    failures = 0
+    for name in ALL:
+        if name not in only:
+            continue
+        t0 = time.monotonic()
+        try:
+            modules[name].run()
+            print(f"# {name} done in {time.monotonic() - t0:.1f}s",
+                  flush=True)
+        except Exception:                          # noqa: BLE001
+            failures += 1
+            print(f"# {name} FAILED:\n{traceback.format_exc()}",
+                  file=sys.stderr, flush=True)
+    sys.exit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Table 2 — checkpoint image size per process vs process count.
+
+Weak-scaling NAS-LU analogue: fixed total state, images shrink ~1/n. Also
+reports what the paper could not: the codec column (zlib / int8) — the
+two-tier store uploads strictly fewer bytes with qsnap compression.
+"""
+from __future__ import annotations
+
+from benchmarks.common import DistributedSimApp, emit
+from repro.ckpt import InMemoryStore, save_checkpoint
+from repro.ckpt.reader import load_manifest
+
+TOTAL_MB = 16.0
+
+
+def run() -> None:
+    for n in (1, 2, 4, 8, 16):
+        app = DistributedSimApp(n, TOTAL_MB)
+        state = app.checkpoint_state()
+        for codec in ("raw", "zlib", "int8+zlib"):
+            store = InMemoryStore()
+            save_checkpoint(store, "t2", 1, state, codec=codec)
+            man = load_manifest(store, "t2", 1)
+            per_proc = [sum(c.nbytes for c in li.chunks)
+                        for name, li in man.leaves.items()
+                        if name.startswith("proc")]
+            emit("table2", f"n={n},codec={codec}", "mb_per_proc",
+                 max(per_proc) / 1e6)
+            emit("table2", f"n={n},codec={codec}", "total_mb",
+                 sum(per_proc) / 1e6)

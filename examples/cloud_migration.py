@@ -1,0 +1,57 @@
+"""Cross-cloud migration of a live training job (paper §5.3 / §7.3.2):
+checkpoint on a Snooze-like cloud, restart on an OpenStack-like cloud with a
+DIFFERENT virtual-cluster size — the trajectory continues bit-exactly.
+
+    PYTHONPATH=src python examples/cloud_migration.py
+"""
+import dataclasses
+import time
+
+from repro.ckpt import InMemoryStore
+from repro.clusters import OpenStackBackend, SnoozeBackend
+from repro.configs import get_config, reduced
+from repro.core import (ASR, CACSService, CheckpointPolicy, CoordState,
+                        migrate)
+from repro.train import TrainerApp
+
+CFG = dataclasses.replace(reduced(get_config("granite-8b")), dtype="float32")
+N_STEPS = 40
+
+
+def main() -> None:
+    shared_ceph = InMemoryStore()           # one Ceph instance, two clouds
+    snooze = CACSService({"snooze": SnoozeBackend(8)},
+                         {"default": shared_ceph})
+    ostack = CACSService({"openstack": OpenStackBackend(8)},
+                         {"default": shared_ceph})
+
+    asr = ASR(name="migrating-train", n_vms=4, backend="snooze",
+              app_factory=lambda: TrainerApp(CFG, global_batch=4, seq_len=64,
+                                             n_steps=N_STEPS),
+              policy=CheckpointPolicy(period_s=2.0, keep_last=2))
+    cid = snooze.submit(asr)
+    snooze.wait_for_state(cid, CoordState.RUNNING, timeout=120)
+    coord = snooze.db.get(cid)
+    while coord.app.current_step < N_STEPS // 3:
+        time.sleep(0.2)
+    print(f"[migrate] at step {coord.app.current_step} on snooze "
+          f"({len(coord.vms)} VMs) — migrating to openstack (2 VMs)")
+
+    res = migrate(snooze, cid, ostack, backend="openstack", n_vms=2)
+    print(f"[migrate] checkpoint {res.checkpoint_s:.2f}s + transfer "
+          f"{res.transfer_s:.2f}s + restart {res.restart_s:.2f}s "
+          f"= {res.total_s:.2f}s")
+    assert not snooze.list_coordinators(), "source must be terminated"
+
+    c2 = ostack.db.get(res.dst_id)
+    print(f"[migrate] resumed on openstack at step {c2.app.current_step}")
+    while not c2.app.is_done():
+        time.sleep(0.5)
+    print(f"[migrate] finished on destination cloud: step "
+          f"{c2.app.current_step}, loss {c2.app.last_loss:.4f}")
+    snooze.shutdown()
+    ostack.shutdown()
+
+
+if __name__ == "__main__":
+    main()

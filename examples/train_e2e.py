@@ -1,0 +1,96 @@
+"""End-to-end driver: train the ~100M-param ``repro-100m`` config for a few
+hundred steps under full CACS management — periodic async checkpoints with
+int8+zlib-compressed images, health monitoring, and a mid-run host failure
+with automatic recovery.
+
+    PYTHONPATH=src python examples/train_e2e.py            # full (~100M)
+    PYTHONPATH=src python examples/train_e2e.py --quick    # reduced config
+
+The full run is CPU-heavy (a real 100M-param model); --quick exercises the
+identical control plane on the reduced config in ~2 minutes.
+"""
+import argparse
+import dataclasses
+import time
+
+from repro.ckpt import InMemoryStore, LocalFSStore, TwoTierStore
+from repro.clusters import SnoozeBackend
+from repro.configs import get_config, reduced
+from repro.core import ASR, CACSService, CheckpointPolicy, CoordState
+from repro.train import AdamWConfig, TrainerApp
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--steps", type=int, default=0)
+    ap.add_argument("--batch", type=int, default=0)
+    ap.add_argument("--seq", type=int, default=0)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_e2e_ckpt")
+    ap.add_argument("--inject-failure", action="store_true", default=True)
+    args = ap.parse_args()
+
+    if args.quick:
+        cfg = dataclasses.replace(reduced(get_config("repro-100m")),
+                                  dtype="float32")
+        steps = args.steps or 120
+        batch, seq = args.batch or 4, args.seq or 64
+    else:
+        cfg = dataclasses.replace(get_config("repro-100m"), dtype="float32")
+        steps = args.steps or 300
+        batch, seq = args.batch or 8, args.seq or 256
+    print(f"[e2e] {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"{steps} steps, batch {batch} x seq {seq}")
+
+    # two-tier image store: fast local tier + durable "remote" tier
+    store = TwoTierStore(InMemoryStore(), LocalFSStore(args.ckpt_dir))
+    backend = SnoozeBackend(n_hosts=8)
+    svc = CACSService({"snooze": backend}, {"default": store})
+
+    asr = ASR(
+        name="e2e-train", n_vms=4, backend="snooze",
+        app_factory=lambda: TrainerApp(
+            cfg, global_batch=batch, seq_len=seq, n_steps=steps,
+            opt=AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=steps)),
+        policy=CheckpointPolicy(period_s=15.0, codec="zlib", keep_last=3),
+    )
+    cid = svc.submit(asr)
+    svc.wait_for_state(cid, CoordState.RUNNING, timeout=600)
+    coord = svc.db.get(cid)
+    print(f"[e2e] RUNNING on {[vm.vm_id for vm in coord.vms]}")
+
+    failed = False
+    t0 = time.monotonic()
+    while not coord.app.is_done():
+        time.sleep(5.0)
+        s = coord.app.current_step
+        if coord.app.step_times:
+            sps = 1.0 / max(1e-9, sum(coord.app.step_times[-10:]) /
+                            min(10, len(coord.app.step_times)))
+        else:
+            sps = 0.0
+        print(f"[e2e] t={time.monotonic()-t0:6.1f}s step={s:4d}/{steps} "
+              f"loss={coord.app.last_loss:.4f} {sps:.2f} steps/s "
+              f"images={svc.list_checkpoints(cid)} "
+              f"recoveries={coord.recoveries}")
+        if args.inject_failure and not failed and s > steps // 3 \
+                and svc.list_checkpoints(cid):
+            print(f"[e2e] !!! injecting host failure at step {s}")
+            backend.sim.fail_host(coord.vms[0].host.host_id)
+            failed = True
+
+    print(f"[e2e] done: step {coord.app.current_step}, "
+          f"final loss {coord.app.last_loss:.4f}, "
+          f"recoveries {coord.recoveries}, "
+          f"first->last loss {coord.app.losses[0]:.3f} -> "
+          f"{coord.app.losses[-1]:.3f}")
+    assert coord.app.losses[-1] < coord.app.losses[0], "no learning?"
+    if args.inject_failure:
+        assert coord.recoveries >= 1, "failure was not recovered"
+    svc.shutdown()
+    store.close()
+    print("[e2e] OK")
+
+
+if __name__ == "__main__":
+    main()

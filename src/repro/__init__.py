@@ -1,0 +1,7 @@
+"""repro — Checkpointing-as-a-Service for multi-pod JAX training/serving.
+
+Reproduction (+ TPU adaptation) of "Checkpointing as a Service in
+Heterogeneous Cloud Environments" (Cao, Simonin, Cooperman, Morin; 2014).
+See DESIGN.md for the paper -> system mapping.
+"""
+__version__ = "1.0.0"

@@ -1,0 +1,11 @@
+from repro.ckpt.reader import latest_step, list_steps, load_manifest, restore
+from repro.ckpt.storage import (InMemoryStore, LocalFSStore, ObjectStore,
+                                TwoTierStore)
+from repro.ckpt.writer import AsyncCheckpointer, save_checkpoint
+from repro.ckpt import gc
+
+__all__ = [
+    "latest_step", "list_steps", "load_manifest", "restore",
+    "InMemoryStore", "LocalFSStore", "ObjectStore", "TwoTierStore",
+    "AsyncCheckpointer", "save_checkpoint", "gc",
+]

@@ -1,0 +1,88 @@
+"""Checkpoint image codecs (paper Table 2: image size is the scaling lever).
+
+Codecs operate on raw little-endian chunk bytes:
+  * ``raw``       — identity.
+  * ``zlib``      — lossless deflate (cheap CPU, good on low-entropy state).
+  * ``int8``      — blockwise absmax int8 quantization of float leaves
+                    (lossy; used for *swap-out* images of preempted jobs and
+                    for gradient compression — not for exact restarts).
+  * ``int8+zlib`` — both.
+
+The int8 codec's math mirrors ``repro.kernels.ref.qsnap_ref`` exactly — the
+Pallas kernel (device-side compression before D2H copy) and this host codec
+are interchangeable, and tests assert bit-identical round-trips between them.
+"""
+from __future__ import annotations
+
+import struct
+import zlib
+from typing import Tuple
+
+import numpy as np
+
+BLOCK = 256
+_MAGIC = b"QS01"
+
+
+def quantize_int8(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """x: float array -> (int8 codes [n_pad], f32 scales [n_blocks])."""
+    flat = np.asarray(x, dtype=np.float32).reshape(-1)
+    n = flat.size
+    n_pad = ((n + BLOCK - 1) // BLOCK) * BLOCK
+    buf = np.zeros(n_pad, np.float32)
+    buf[:n] = flat
+    blocks = buf.reshape(-1, BLOCK)
+    scales = np.max(np.abs(blocks), axis=1) / 127.0
+    scales = np.where(scales == 0, 1.0, scales).astype(np.float32)
+    codes = np.clip(np.rint(blocks / scales[:, None]), -127, 127).astype(np.int8)
+    return codes.reshape(-1), scales
+
+
+def dequantize_int8(codes: np.ndarray, scales: np.ndarray,
+                    n: int) -> np.ndarray:
+    blocks = codes.reshape(-1, BLOCK).astype(np.float32) * scales[:, None]
+    return blocks.reshape(-1)[:n]
+
+
+def encode(data: bytes, dtype: np.dtype, codec: str) -> bytes:
+    """Encode one chunk's raw bytes."""
+    if codec == "raw":
+        return data
+    if codec == "zlib":
+        return zlib.compress(data, level=1)
+    if codec in ("int8", "int8+zlib"):
+        dt = np.dtype(dtype)
+        if dt.kind != "f":
+            payload = _MAGIC + b"RAWD" + data     # non-float: store raw
+        else:
+            arr = np.frombuffer(data, dtype=dt)
+            codes, scales = quantize_int8(arr.astype(np.float32))
+            payload = (_MAGIC + b"INT8"
+                       + struct.pack("<qq", arr.size, scales.size)
+                       + scales.tobytes() + codes.tobytes())
+        if codec == "int8+zlib":
+            return zlib.compress(payload, level=1)
+        return payload
+    raise ValueError(f"unknown codec {codec!r}")
+
+
+def decode(data: bytes, dtype: np.dtype, codec: str) -> bytes:
+    if codec == "raw":
+        return data
+    if codec == "zlib":
+        return zlib.decompress(data)
+    if codec in ("int8", "int8+zlib"):
+        if codec == "int8+zlib":
+            data = zlib.decompress(data)
+        assert data[:4] == _MAGIC, "corrupt int8 chunk"
+        kind = data[4:8]
+        if kind == b"RAWD":
+            return data[8:]
+        n, n_scales = struct.unpack("<qq", data[8:24])
+        off = 24
+        scales = np.frombuffer(data[off:off + 4 * n_scales], np.float32)
+        off += 4 * n_scales
+        codes = np.frombuffer(data[off:], np.int8)
+        out = dequantize_int8(codes, scales, n)
+        return out.astype(np.dtype(dtype)).tobytes()
+    raise ValueError(f"unknown codec {codec!r}")

@@ -1,0 +1,29 @@
+"""Checkpoint retention / garbage collection."""
+from __future__ import annotations
+
+from typing import List
+
+from repro.ckpt.layout import step_prefix
+from repro.ckpt.reader import list_steps
+from repro.ckpt.storage import ObjectStore
+
+
+def collect(store: ObjectStore, prefix: str, *, keep_last: int = 3,
+            keep_every: int = 0) -> List[int]:
+    """Delete old committed checkpoints.
+
+    keep_last:  always retain the newest k steps.
+    keep_every: additionally retain steps divisible by this (milestones).
+    Returns the deleted step numbers.
+    """
+    steps = list_steps(store, prefix)
+    keep = set(steps[-keep_last:]) if keep_last else set()
+    if keep_every:
+        keep |= {s for s in steps if s % keep_every == 0}
+    deleted = []
+    for s in steps:
+        if s in keep:
+            continue
+        store.delete_prefix(step_prefix(prefix, s))
+        deleted.append(s)
+    return deleted

@@ -1,0 +1,244 @@
+"""Pluggable checkpoint object stores (paper §6.2: NFS / S3 / Ceph).
+
+Three backends mirror the paper's storage design:
+  * ``InMemoryStore`` — dict-backed; optional simulated latency/bandwidth so
+    the paper's figures (upload/download time vs size) are reproducible on a
+    single host.
+  * ``LocalFSStore``  — directory-backed (the paper's "NFS" role).
+  * ``TwoTierStore``  — fast local tier + lazy async upload to a remote tier
+    (paper §5.2: "written first to local storage, copied later to remote
+    storage on a lazy basis").
+"""
+from __future__ import annotations
+
+import os
+import queue
+import threading
+import time
+from typing import Dict, Iterable, List, Optional
+
+
+class ObjectStore:
+    """Abstract flat key/value object store (S3-shaped)."""
+
+    def put(self, key: str, data: bytes) -> None:
+        raise NotImplementedError
+
+    def get(self, key: str) -> bytes:
+        raise NotImplementedError
+
+    def exists(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def list(self, prefix: str) -> List[str]:
+        raise NotImplementedError
+
+    def delete(self, key: str) -> None:
+        raise NotImplementedError
+
+    def delete_prefix(self, prefix: str) -> int:
+        n = 0
+        for k in list(self.list(prefix)):
+            self.delete(k)
+            n += 1
+        return n
+
+    # Stores that upload lazily override this to block until durable.
+    def flush(self) -> None:
+        pass
+
+    def total_bytes(self, prefix: str = "") -> int:
+        return sum(len(self.get(k)) for k in self.list(prefix))
+
+
+class InMemoryStore(ObjectStore):
+    """Dict-backed store with an optional simulated network cost model.
+
+    ``latency_s`` + len/``bandwidth_bps`` of wall-clock sleep per op lets the
+    cluster simulator reproduce the paper's network-bound checkpoint/restart
+    curves (Fig 3b/3c) deterministically.
+    """
+
+    def __init__(self, latency_s: float = 0.0,
+                 bandwidth_bps: Optional[float] = None,
+                 shared_link: bool = False):
+        self._data: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+        self._link_lock = threading.Lock()
+        self.latency_s = latency_s
+        self.bandwidth_bps = bandwidth_bps
+        # shared_link=True serializes bandwidth cost across threads —
+        # models a shared NFS/Ceph ingress (paper Fig 3c's restart jitter
+        # comes exactly from this contention).
+        self.shared_link = shared_link
+        self.put_count = 0
+        self.get_count = 0
+        self.bytes_in = 0
+        self.bytes_out = 0
+
+    def _cost(self, nbytes: int) -> None:
+        if self.latency_s > 0:
+            time.sleep(self.latency_s)
+        if self.bandwidth_bps:
+            t = nbytes / self.bandwidth_bps
+            if self.shared_link:
+                with self._link_lock:
+                    time.sleep(t)
+            elif t > 0:
+                time.sleep(t)
+
+    def put(self, key: str, data: bytes) -> None:
+        self._cost(len(data))
+        with self._lock:
+            self._data[key] = bytes(data)
+            self.put_count += 1
+            self.bytes_in += len(data)
+
+    def get(self, key: str) -> bytes:
+        with self._lock:
+            data = self._data[key]
+            self.get_count += 1
+            self.bytes_out += len(data)
+        self._cost(len(data))
+        return data
+
+    def exists(self, key: str) -> bool:
+        with self._lock:
+            return key in self._data
+
+    def list(self, prefix: str) -> List[str]:
+        with self._lock:
+            return sorted(k for k in self._data if k.startswith(prefix))
+
+    def delete(self, key: str) -> None:
+        with self._lock:
+            self._data.pop(key, None)
+
+
+class LocalFSStore(ObjectStore):
+    """Directory-backed store. Keys map to files (``/`` allowed in keys).
+
+    Writes are atomic (tmp + rename) so a crashed writer never leaves a
+    half-written object visible.
+    """
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        p = os.path.join(self.root, key)
+        assert os.path.abspath(p).startswith(os.path.abspath(self.root))
+        return p
+
+    def put(self, key: str, data: bytes) -> None:
+        p = self._path(key)
+        os.makedirs(os.path.dirname(p), exist_ok=True)
+        tmp = p + f".tmp.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, p)
+
+    def get(self, key: str) -> bytes:
+        with open(self._path(key), "rb") as f:
+            return f.read()
+
+    def exists(self, key: str) -> bool:
+        return os.path.isfile(self._path(key))
+
+    def list(self, prefix: str) -> List[str]:
+        out = []
+        for dirpath, _, files in os.walk(self.root):
+            for fn in files:
+                if fn.endswith(".tmp") or ".tmp." in fn:
+                    continue
+                key = os.path.relpath(os.path.join(dirpath, fn), self.root)
+                key = key.replace(os.sep, "/")
+                if key.startswith(prefix):
+                    out.append(key)
+        return sorted(out)
+
+    def delete(self, key: str) -> None:
+        try:
+            os.remove(self._path(key))
+        except FileNotFoundError:
+            pass
+
+
+class TwoTierStore(ObjectStore):
+    """Local tier for writes, lazy background replication to remote tier.
+
+    Reads prefer local, falling back to remote (so a restarted host that
+    lost its local tier still restores). ``flush()`` blocks until all
+    pending uploads are durable in the remote tier — the commit marker is
+    only written after flush (see writer.py), preserving atomicity.
+    """
+
+    def __init__(self, local: ObjectStore, remote: ObjectStore):
+        self.local = local
+        self.remote = remote
+        self._q: "queue.Queue[Optional[str]]" = queue.Queue()
+        self._pending: Dict[str, int] = {}
+        self._lock = threading.Lock()
+        self._err: Optional[BaseException] = None
+        self._thread = threading.Thread(target=self._uploader, daemon=True)
+        self._thread.start()
+
+    def _uploader(self) -> None:
+        while True:
+            key = self._q.get()
+            if key is None:
+                return
+            try:
+                self.remote.put(key, self.local.get(key))
+            except BaseException as e:        # surfaced at flush()
+                self._err = e
+            finally:
+                with self._lock:
+                    self._pending[key] -= 1
+                    if self._pending[key] == 0:
+                        del self._pending[key]
+
+    def put(self, key: str, data: bytes) -> None:
+        self.local.put(key, data)
+        with self._lock:
+            self._pending[key] = self._pending.get(key, 0) + 1
+        self._q.put(key)
+
+    def get(self, key: str) -> bytes:
+        try:
+            return self.local.get(key)
+        except (KeyError, FileNotFoundError):
+            return self.remote.get(key)
+
+    def exists(self, key: str) -> bool:
+        return self.local.exists(key) or self.remote.exists(key)
+
+    def list(self, prefix: str) -> List[str]:
+        return sorted(set(self.local.list(prefix)) |
+                      set(self.remote.list(prefix)))
+
+    def delete(self, key: str) -> None:
+        self.local.delete(key)
+        self.remote.delete(key)
+
+    def flush(self) -> None:
+        while True:
+            with self._lock:
+                if not self._pending:
+                    break
+            time.sleep(0.001)
+        if self._err is not None:
+            err, self._err = self._err, None
+            raise err
+
+    def drop_local(self) -> None:
+        """Simulate losing the fast tier (host failure)."""
+        for k in list(self.local.list("")):
+            self.local.delete(k)
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._thread.join(timeout=5)

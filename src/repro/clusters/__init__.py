@@ -1,0 +1,14 @@
+from repro.clusters.base import (ClusterBackend, SimBackend, VMHandle,
+                                 VMState, VMTemplate)
+from repro.clusters.local import LocalBackend
+from repro.clusters.openstack import OpenStackBackend
+from repro.clusters.simulator import (CapacityError, ClusterSim, CostModel,
+                                      HostState, VirtualHost, sim_sleep)
+from repro.clusters.snooze import SnoozeBackend
+
+__all__ = [
+    "ClusterBackend", "SimBackend", "VMHandle", "VMState", "VMTemplate",
+    "LocalBackend", "OpenStackBackend", "SnoozeBackend",
+    "CapacityError", "ClusterSim", "CostModel", "HostState", "VirtualHost",
+    "sim_sleep",
+]

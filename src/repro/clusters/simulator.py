@@ -1,0 +1,141 @@
+"""Virtual cluster simulator: hosts, failures, and a calibrated cost model.
+
+The simulator stands in for the IaaS data plane (Grid'5000 in the paper).
+Costs are wall-clock sleeps scaled by ``TIME_SCALE`` so the paper's curves
+(Fig 3/4/6) reproduce shape-faithfully in seconds instead of minutes.
+Failure injection drives the fault-tolerance integration tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import threading
+import time
+import uuid
+from typing import Callable, Dict, List, Optional
+
+# Global time scale for simulated latencies (1.0 = paper-calibrated seconds).
+TIME_SCALE = 0.01
+
+
+def sim_sleep(seconds: float) -> None:
+    if seconds > 0:
+        time.sleep(seconds * TIME_SCALE)
+
+
+class HostState(enum.Enum):
+    IDLE = "idle"
+    ALLOCATED = "allocated"
+    FAILED = "failed"
+
+
+@dataclasses.dataclass
+class VirtualHost:
+    host_id: str
+    vcpus: int = 2
+    memory_gb: int = 4
+    state: HostState = HostState.IDLE
+    owner: Optional[str] = None        # coordinator id
+    # health-degradation knob for straggler tests: multiplier on step time
+    slowdown: float = 1.0
+
+
+@dataclasses.dataclass(frozen=True)
+class CostModel:
+    """Calibrated against the paper's measurements (see benchmarks/)."""
+    alloc_base_s: float = 5.0          # IaaS request processing
+    alloc_per_vm_s: float = 1.0        # per-VM boot cost
+    alloc_batch_parallel: int = 8      # VMs booted concurrently by the IaaS
+    ssh_cmd_s: float = 0.5             # one provisioning command on one VM
+    ssh_connect_s: float = 1.0         # new SSH connection setup
+    hop_latency_s: float = 0.05        # one monitoring-tree hop
+    release_s: float = 0.5
+
+
+class ClusterSim:
+    """A pool of virtual hosts + failure injection."""
+
+    def __init__(self, n_hosts: int, cost: CostModel = CostModel(),
+                 name: str = "cluster"):
+        self.name = name
+        self.cost = cost
+        self._hosts: Dict[str, VirtualHost] = {}
+        self._lock = threading.RLock()
+        self._failure_listeners: List[Callable[[VirtualHost], None]] = []
+        for i in range(n_hosts):
+            hid = f"{name}-host-{i:04d}"
+            self._hosts[hid] = VirtualHost(host_id=hid)
+
+    # ---- capacity ------------------------------------------------------
+    @property
+    def n_hosts(self) -> int:
+        return len(self._hosts)
+
+    def idle_hosts(self) -> List[VirtualHost]:
+        with self._lock:
+            return [h for h in self._hosts.values()
+                    if h.state == HostState.IDLE]
+
+    def host(self, host_id: str) -> VirtualHost:
+        return self._hosts[host_id]
+
+    # ---- allocation ----------------------------------------------------
+    def allocate(self, n: int, owner: str) -> List[VirtualHost]:
+        """Claim n hosts (raises if capacity is insufficient) + boot cost."""
+        with self._lock:
+            idle = [h for h in self._hosts.values()
+                    if h.state == HostState.IDLE]
+            if len(idle) < n:
+                raise CapacityError(
+                    f"{self.name}: requested {n} hosts, {len(idle)} idle")
+            got = idle[:n]
+            for h in got:
+                h.state = HostState.ALLOCATED
+                h.owner = owner
+        # boot cost: base + ceil(n / batch) * per_vm
+        batches = -(-n // self.cost.alloc_batch_parallel)
+        sim_sleep(self.cost.alloc_base_s + batches * self.cost.alloc_per_vm_s)
+        return got
+
+    def release(self, hosts: List[VirtualHost]) -> None:
+        sim_sleep(self.cost.release_s)
+        with self._lock:
+            for h in hosts:
+                if h.state != HostState.FAILED:
+                    h.state = HostState.IDLE
+                h.owner = None
+                h.slowdown = 1.0
+
+    # ---- failures ------------------------------------------------------
+    def fail_host(self, host_id: str) -> None:
+        with self._lock:
+            h = self._hosts[host_id]
+            h.state = HostState.FAILED
+            listeners = list(self._failure_listeners)
+        for cb in listeners:
+            cb(h)
+
+    def recover_host(self, host_id: str) -> None:
+        with self._lock:
+            h = self._hosts[host_id]
+            h.state = HostState.IDLE
+            h.owner = None
+
+    def degrade_host(self, host_id: str, slowdown: float) -> None:
+        with self._lock:
+            self._hosts[host_id].slowdown = slowdown
+
+    def on_failure(self, cb: Callable[[VirtualHost], None]) -> None:
+        self._failure_listeners.append(cb)
+
+    def is_reachable(self, host_id: str) -> bool:
+        with self._lock:
+            return self._hosts[host_id].state == HostState.ALLOCATED
+
+
+class CapacityError(RuntimeError):
+    pass
+
+
+def fresh_id(kind: str) -> str:
+    return f"{kind}-{uuid.uuid4().hex[:10]}"

@@ -1,0 +1,24 @@
+"""llama4-maverick-400b-a17b [moe] — MoE 128e top-1, early fusion.
+
+48L d_model=5120 40H (GQA kv=8) d_ff=8192 vocab=202048, MoE 128 experts top-1
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]
+MoE on every other layer (interleave step 2) + always-on shared expert,
+matching the published llama4 maverick layout.
+"""
+from repro.configs.base import ArchConfig, MoEConfig
+
+CONFIG = ArchConfig(
+    name="llama4-maverick-400b-a17b",
+    family="moe",
+    n_layers=48,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    mlp_act="swiglu",
+    moe=MoEConfig(num_experts=128, top_k=1, d_ff=8192, every=2,
+                  shared_expert=True),
+    use_fsdp=True,
+    subquadratic=False,
+)

@@ -1,0 +1,23 @@
+"""CACS — Cloud-Agnostic Checkpointing Service (the paper's contribution).
+
+Public surface:
+  * ``CACSService``       — REST-style facade (paper Table 1)
+  * ``ASR``               — Application Submission Request (paper §5.1)
+  * ``PriorityScheduler`` — job swapping / over-subscription (use case 2)
+  * ``migration``         — clone / migrate / cloudify (paper §5.3, §7.3)
+"""
+from repro.core.application import Application, AppContext, SimulatedApp
+from repro.core.coordinator import (ASR, CheckpointPolicy, Coordinator,
+                                    CoordinatorDB, CoordState,
+                                    InvalidTransition)
+from repro.core.migration import clone, cloudify, migrate, MigrationResult
+from repro.core.scheduler import PriorityScheduler
+from repro.core.service import CACSService
+
+__all__ = [
+    "Application", "AppContext", "SimulatedApp",
+    "ASR", "CheckpointPolicy", "Coordinator", "CoordinatorDB", "CoordState",
+    "InvalidTransition",
+    "clone", "cloudify", "migrate", "MigrationResult",
+    "PriorityScheduler", "CACSService",
+]

@@ -1,0 +1,310 @@
+"""Application Manager (paper §4.2): orchestrates the coordinator lifecycle.
+
+Owns the bring-up pipeline (allocate -> provision -> start), the periodic
+checkpoint daemon, and all recovery paths:
+  * VM failure  -> passive recovery: replace unreachable VMs, restore from
+                   the latest image, restart (paper §6.3 case 1);
+  * app failure -> in-place restart on the same VMs (paper §6.3 case 2 —
+                   "as an optimization");
+  * straggler   -> proactive suspend to stable storage (paper §1: "detects
+                   ... exceptionally low performance ... and proactively
+                   suspends the job"); the scheduler resumes it later.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import threading
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+from repro.clusters.base import SimBackend
+from repro.core.application import AppContext
+from repro.core.checkpoint_manager import CheckpointManager
+from repro.core.cloud_manager import CloudManager
+from repro.core.coordinator import (ASR, Coordinator, CoordinatorDB,
+                                    CoordState)
+from repro.core.monitoring import MonitoringManager
+from repro.core.provision import ProvisionManager
+
+
+class AppManager:
+    def __init__(self, db: CoordinatorDB, cloud: CloudManager,
+                 provision: ProvisionManager, ckpt: CheckpointManager,
+                 workers: int = 100):
+        self.db = db
+        self.cloud = cloud
+        self.provision = provision
+        self.ckpt = ckpt
+        # "users requests are mostly treated in background using a pool of
+        # threads" (§6.5) — sized for the paper's 100-concurrent-apps test.
+        self.pool = cf.ThreadPoolExecutor(max_workers=workers,
+                                          thread_name_prefix="appmgr")
+        self.monitor = MonitoringManager(self._on_monitor_event)
+        self._ckpt_daemon_stop = threading.Event()
+        self._ckpt_daemon: Optional[threading.Thread] = None
+        self._next_ckpt: Dict[str, float] = {}
+        self._step_counter: Dict[str, int] = {}
+
+    # ------------------------------------------------------------------
+    # Submission (paper §5.1)
+    # ------------------------------------------------------------------
+    def submit(self, asr: ASR, block: bool = False) -> Coordinator:
+        coord = self.db.create(asr)
+        fut = self.pool.submit(self._bringup, coord)
+        if block:
+            fut.result()
+        return coord
+
+    def _provision_cost(self, backend_name: str):
+        backend = self.cloud.backend(backend_name)
+        return {"cost": backend.sim.cost} if isinstance(backend, SimBackend) \
+            else {}
+
+    def _bringup_infra(self, coord: Coordinator) -> None:
+        """CREATING -> PROVISIONING -> READY (allocate + provision)."""
+        asr = coord.asr
+        vms = self.cloud.create_cluster(asr.backend, asr.n_vms,
+                                        asr.template, coord.coord_id)
+        coord.vms = vms
+        self.db.transition(coord, CoordState.PROVISIONING)
+        self.provision.provision(vms, asr.provision_cmds,
+                                 **self._provision_cost(asr.backend))
+        self.db.transition(coord, CoordState.READY)
+
+    def _bringup(self, coord: Coordinator,
+                 restore_state: Any = None) -> None:
+        try:
+            self._bringup_infra(coord)
+            self._start_app(coord, restore_state)
+        except Exception as e:                     # noqa: BLE001
+            coord.error = f"{e}\n{traceback.format_exc()}"
+            try:
+                self.db.transition(coord, CoordState.ERROR, str(e))
+            except Exception:
+                pass
+
+    def _start_app(self, coord: Coordinator, restore_state: Any) -> None:
+        asr = coord.asr
+        if coord.app is None:
+            coord.app = asr.app_factory()
+        ctx = AppContext(coord.coord_id, coord.vms, service=None)
+        coord.app.start(ctx, restore_state)
+        self.db.transition(coord, CoordState.RUNNING)
+        backend = self.cloud.backend(asr.backend)
+        native = backend.supports_failure_notifications
+        hook = asr.health_hook or (lambda: coord.app.healthy())
+        self.monitor.watch(coord.coord_id, coord.vms, hook, native)
+        if asr.policy.period_s > 0:
+            self._next_ckpt[coord.coord_id] = (
+                time.monotonic() + asr.policy.period_s)
+
+    # ------------------------------------------------------------------
+    # Checkpointing (paper §5.2: user-initiated / periodic / app-initiated)
+    # ------------------------------------------------------------------
+    def checkpoint_now(self, coord_id: str, *, blocking: bool = True) -> int:
+        coord = self.db.get(coord_id)
+        with coord.lock:
+            if coord.state not in (CoordState.RUNNING, CoordState.READY):
+                raise RuntimeError(
+                    f"cannot checkpoint in state {coord.state.value}")
+            state = coord.app.checkpoint_state()
+        step = self._step_counter.get(coord_id, 0) + 1
+        self._step_counter[coord_id] = step
+        self.ckpt.save(coord, step, state, blocking=blocking)
+        return step
+
+    def start_checkpoint_daemon(self, tick_s: float = 0.02) -> None:
+        if self._ckpt_daemon is None:
+            self._ckpt_daemon_stop.clear()
+            self._ckpt_daemon = threading.Thread(
+                target=self._ckpt_loop, args=(tick_s,), daemon=True)
+            self._ckpt_daemon.start()
+        self.monitor.start()
+
+    def stop_daemons(self) -> None:
+        self._ckpt_daemon_stop.set()
+        if self._ckpt_daemon is not None:
+            self._ckpt_daemon.join(timeout=5)
+            self._ckpt_daemon = None
+        self.monitor.stop()
+
+    def _ckpt_loop(self, tick_s: float) -> None:
+        while not self._ckpt_daemon_stop.wait(tick_s):
+            now = time.monotonic()
+            for coord_id, due in list(self._next_ckpt.items()):
+                if now < due:
+                    continue
+                try:
+                    coord = self.db.get(coord_id)
+                except KeyError:
+                    self._next_ckpt.pop(coord_id, None)
+                    continue
+                if coord.state != CoordState.RUNNING:
+                    continue
+                try:
+                    self.checkpoint_now(coord_id, blocking=False)
+                except RuntimeError:
+                    pass
+                self._next_ckpt[coord_id] = (
+                    now + coord.asr.policy.period_s)
+
+    # ------------------------------------------------------------------
+    # Recovery (paper §5.3 / §6.3)
+    # ------------------------------------------------------------------
+    def _on_monitor_event(self, coord_id: str, kind: str) -> None:
+        try:
+            coord = self.db.get(coord_id)
+        except KeyError:
+            return
+        if kind == "straggler":
+            action = getattr(coord.asr, "straggler_action", "suspend")
+            if action == "suspend":
+                self.pool.submit(self._guarded, self.suspend, coord_id,
+                                 "straggler")
+            return
+        self.pool.submit(self._guarded, self._recover, coord_id, kind)
+
+    def _guarded(self, fn, *args) -> None:
+        try:
+            fn(*args)
+        except Exception:                          # noqa: BLE001
+            traceback.print_exc()
+
+    def _recover(self, coord_id: str, kind: str) -> None:
+        coord = self.db.get(coord_id)
+        with coord.lock:
+            if coord.state != CoordState.RUNNING:
+                return                              # debounce duplicates
+            self.db.transition(coord, CoordState.RESTARTING, kind)
+        self.monitor.unwatch(coord_id)
+        coord.recoveries += 1
+        try:
+            coord.app.stop()
+            self.ckpt.wait(coord)
+            if kind == "vm_failure":
+                # passive recovery: replace unreachable VMs with fresh ones
+                self.provision.forget(coord.vms)
+                coord.vms = self.cloud.replace_failed(
+                    coord.asr.backend, coord.vms, coord.asr.template,
+                    coord.coord_id)
+                self.provision.provision(coord.vms, coord.asr.provision_cmds,
+                                         **self._provision_cost(coord.asr.backend))
+            state = None
+            latest = self.ckpt.latest(coord)
+            if latest is not None:
+                state = self.ckpt.load(coord, latest)
+            self._start_app(coord, state)
+        except Exception as e:                     # noqa: BLE001
+            coord.error = str(e)
+            self.db.transition(coord, CoordState.ERROR, str(e))
+
+    def restart_from(self, coord_id: str, step: Optional[int] = None) -> None:
+        """POST /coordinators/:id/checkpoints/:id — restart from an image.
+
+        Covers all the paper's §5.3 cases: restart a running app from an
+        earlier image; restart a suspended/errored app; and bring up a
+        freshly-created clone target whose image was just uploaded ("this
+        will trigger the passive recovery mechanism to generate a new
+        virtual cluster").
+        """
+        coord = self.db.get(coord_id)
+        fresh_clone = False
+        with coord.lock:
+            if coord.state == CoordState.RUNNING:
+                self.db.transition(coord, CoordState.RESTARTING, "user")
+                self.monitor.unwatch(coord_id)
+                coord.app.stop()
+            elif coord.state in (CoordState.SUSPENDED, CoordState.ERROR):
+                self.db.transition(coord, CoordState.RESTARTING, "user")
+            elif coord.state == CoordState.CREATING:
+                fresh_clone = True
+            else:
+                raise RuntimeError(f"cannot restart from {coord.state.value}")
+        self.ckpt.wait(coord)
+        if fresh_clone:
+            self._bringup_infra(coord)
+        elif not coord.vms:
+            coord.vms = self.cloud.create_cluster(
+                coord.asr.backend, coord.asr.n_vms, coord.asr.template,
+                coord.coord_id)
+            self.provision.provision(coord.vms, coord.asr.provision_cmds,
+                                     **self._provision_cost(coord.asr.backend))
+        elif not all(vm.reachable for vm in coord.vms):
+            self.provision.forget(coord.vms)
+            coord.vms = self.cloud.replace_failed(
+                coord.asr.backend, coord.vms, coord.asr.template,
+                coord.coord_id)
+            self.provision.provision(coord.vms, coord.asr.provision_cmds,
+                                     **self._provision_cost(coord.asr.backend))
+        state = self.ckpt.load(coord, step)
+        self._start_app(coord, state)
+
+    # ------------------------------------------------------------------
+    # Job swapping (use case 2) + proactive suspend
+    # ------------------------------------------------------------------
+    def suspend(self, coord_id: str, reason: str = "user") -> None:
+        coord = self.db.get(coord_id)
+        with coord.lock:
+            if coord.state != CoordState.RUNNING:
+                raise RuntimeError(f"cannot suspend {coord.state.value}")
+            state = coord.app.checkpoint_state()
+            step = self._step_counter.get(coord_id, 0) + 1
+            self._step_counter[coord_id] = step
+            self.ckpt.save(coord, step, state, blocking=True,
+                           metadata={"suspend": reason})
+            coord.app.stop()
+            self.db.transition(coord, CoordState.SUSPENDED, reason)
+        self.monitor.unwatch(coord_id)
+        self._next_ckpt.pop(coord_id, None)
+        self.provision.forget(coord.vms)
+        self.cloud.destroy_cluster(coord.asr.backend, coord.vms)
+        coord.vms = []
+
+    def resume(self, coord_id: str, block: bool = True) -> None:
+        coord = self.db.get(coord_id)
+        with coord.lock:
+            if coord.state != CoordState.SUSPENDED:
+                raise RuntimeError(f"cannot resume {coord.state.value}")
+            self.db.transition(coord, CoordState.RESTARTING, "resume")
+
+        def _do():
+            try:
+                asr = coord.asr
+                coord.vms = self.cloud.create_cluster(
+                    asr.backend, asr.n_vms, asr.template, coord.coord_id)
+                self.provision.provision(coord.vms, asr.provision_cmds,
+                                         **self._provision_cost(asr.backend))
+                state = self.ckpt.load(coord)
+                self._start_app(coord, state)
+            except Exception as e:                 # noqa: BLE001
+                coord.error = str(e)
+                self.db.transition(coord, CoordState.ERROR, str(e))
+
+        if block:
+            _do()
+        else:
+            self.pool.submit(_do)
+
+    # ------------------------------------------------------------------
+    # Termination (paper §5.4)
+    # ------------------------------------------------------------------
+    def terminate(self, coord_id: str, *, delete_images: bool = True) -> Dict:
+        coord = self.db.get(coord_id)
+        with coord.lock:
+            self.db.transition(coord, CoordState.TERMINATING, "user")
+        self.monitor.unwatch(coord_id)
+        self._next_ckpt.pop(coord_id, None)
+        if coord.app is not None:
+            coord.app.stop()
+        self.ckpt.wait(coord)
+        if coord.vms:
+            self.provision.forget(coord.vms)
+            self.cloud.destroy_cluster(coord.asr.backend, coord.vms)
+            coord.vms = []
+        if delete_images:
+            self.ckpt.delete_all(coord)
+        self.db.transition(coord, CoordState.TERMINATED)
+        final = coord.to_dict()
+        self.db.remove(coord_id)          # paper §5.4: delete the db entry
+        return final

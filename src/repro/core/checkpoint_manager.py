@@ -1,0 +1,131 @@
+"""Checkpoint Manager (paper §6.2): application-image lifecycle over
+pluggable storage backends.
+
+Stateless by design: "The Checkpoint Manager is not aware of the existence
+of checkpoint images until a restart is required. At that time [it] will
+choose the most recent checkpoint image by default, but a user may also
+specify an earlier image." — reproduced verbatim: all queries go to the
+store's committed manifests; nothing is cached in the manager.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.ckpt import gc as ckpt_gc
+from repro.ckpt.reader import (latest_step, list_steps, load_manifest,
+                               restore)
+from repro.ckpt.storage import ObjectStore
+from repro.ckpt.writer import AsyncCheckpointer, save_checkpoint
+from repro.core.coordinator import CheckpointPolicy, Coordinator
+
+
+class CheckpointManager:
+    def __init__(self, stores: Dict[str, ObjectStore]):
+        self._stores = dict(stores)
+        self._async: Dict[str, AsyncCheckpointer] = {}
+        self._lock = threading.Lock()
+
+    def store(self, name: str = "default") -> ObjectStore:
+        if name not in self._stores:
+            raise KeyError(f"unknown store {name!r}; have {sorted(self._stores)}")
+        return self._stores[name]
+
+    def register_store(self, name: str, store: ObjectStore) -> None:
+        with self._lock:
+            self._stores[name] = store
+
+    # ---- save ----------------------------------------------------------
+    def save(self, coord: Coordinator, step: int, state: Any, *,
+             blocking: bool = True,
+             metadata: Optional[Dict[str, Any]] = None) -> None:
+        pol = coord.asr.policy
+        store = self.store(pol.store)
+        meta = {"app": coord.asr.name, **(metadata or {})}
+
+        def run_gc(_step=None):
+            if pol.keep_last:
+                ckpt_gc.collect(store, coord.ckpt_prefix,
+                                keep_last=pol.keep_last,
+                                keep_every=pol.keep_every)
+
+        if blocking:
+            save_checkpoint(store, coord.ckpt_prefix, step, state,
+                            codec=pol.codec, metadata=meta)
+            run_gc()
+        else:
+            # GC must run post-commit, or it would count the in-flight step
+            ck = self._checkpointer(coord)
+            ck.save(step, state, metadata=meta, on_commit=run_gc)
+
+    def _checkpointer(self, coord: Coordinator) -> AsyncCheckpointer:
+        with self._lock:
+            if coord.coord_id not in self._async:
+                pol = coord.asr.policy
+                self._async[coord.coord_id] = AsyncCheckpointer(
+                    self.store(pol.store), coord.ckpt_prefix, codec=pol.codec)
+            return self._async[coord.coord_id]
+
+    def wait(self, coord: Coordinator) -> None:
+        with self._lock:
+            ck = self._async.get(coord.coord_id)
+        if ck is not None:
+            ck.wait()
+
+    # ---- query / restore -------------------------------------------------
+    def list_images(self, coord: Coordinator) -> List[int]:
+        return list_steps(self.store(coord.asr.policy.store),
+                          coord.ckpt_prefix)
+
+    def image_info(self, coord: Coordinator, step: int) -> Dict[str, Any]:
+        man = load_manifest(self.store(coord.asr.policy.store),
+                            coord.ckpt_prefix, step)
+        nbytes = sum(c.nbytes for li in man.leaves.values()
+                     for c in li.chunks)
+        return {"step": man.step, "codec": man.codec, "bytes": nbytes,
+                "leaves": len(man.leaves), "metadata": man.metadata}
+
+    def latest(self, coord: Coordinator) -> Optional[int]:
+        return latest_step(self.store(coord.asr.policy.store),
+                           coord.ckpt_prefix)
+
+    def load(self, coord: Coordinator, step: Optional[int] = None, *,
+             shardings: Any = None, target: Any = None) -> Any:
+        tree, _ = restore(self.store(coord.asr.policy.store),
+                          coord.ckpt_prefix, step,
+                          target=target, shardings=shardings)
+        return tree
+
+    # ---- upload (migration ingest; paper §5.3 "upload a checkpoint") ----
+    def upload_image(self, coord: Coordinator, src_store: ObjectStore,
+                     src_prefix: str, step: int) -> None:
+        """Copy a committed image from another service's store (clone)."""
+        from repro.ckpt.layout import step_prefix
+        dst = self.store(coord.asr.policy.store)
+        src_sp = step_prefix(src_prefix, step)
+        dst_sp = step_prefix(coord.ckpt_prefix, step)
+        keys = [k for k in src_store.list(src_sp)
+                if not k.endswith("COMMITTED")]
+        # chunk/manifest keys embed the prefix — rewrite on copy
+        for k in keys:
+            data = src_store.get(k)
+            new_key = dst_sp + k[len(src_sp):]
+            if k.endswith("MANIFEST.json"):
+                data = data.replace(src_prefix.encode(),
+                                    coord.ckpt_prefix.encode())
+            dst.put(new_key, data)
+        dst.flush()
+        dst.put(f"{dst_sp}/COMMITTED", b"1")
+
+    def delete_image(self, coord: Coordinator, step: int) -> None:
+        from repro.ckpt.layout import step_prefix
+        self.store(coord.asr.policy.store).delete_prefix(
+            step_prefix(coord.ckpt_prefix, step))
+
+    def delete_all(self, coord: Coordinator) -> None:
+        self.store(coord.asr.policy.store).delete_prefix(coord.ckpt_prefix)
+        with self._lock:
+            ck = self._async.pop(coord.coord_id, None)
+        if ck is not None:
+            ck.close()

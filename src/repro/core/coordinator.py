@@ -1,0 +1,165 @@
+"""Coordinator records + lifecycle state machine (paper Fig 2, Table 1).
+
+One coordinator per application, exactly as DMTCP associates one coordinator
+per checkpointed computation. We extend the paper's state set with
+SUSPENDED (job swapping, use case 2) and RESTARTING (recovery in progress).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import json
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.ckpt.storage import ObjectStore
+from repro.clusters.base import VMHandle, VMTemplate
+from repro.clusters.simulator import fresh_id
+
+
+class CoordState(enum.Enum):
+    CREATING = "CREATING"
+    PROVISIONING = "PROVISIONING"
+    READY = "READY"
+    RUNNING = "RUNNING"
+    SUSPENDED = "SUSPENDED"          # swapped out to stable storage
+    RESTARTING = "RESTARTING"
+    TERMINATING = "TERMINATING"
+    TERMINATED = "TERMINATED"
+    ERROR = "ERROR"
+
+
+# Legal transitions (paper Fig 2 + swapping/recovery extensions).
+TRANSITIONS: Dict[CoordState, tuple] = {
+    CoordState.CREATING: (CoordState.PROVISIONING, CoordState.ERROR,
+                          CoordState.TERMINATING),
+    CoordState.PROVISIONING: (CoordState.READY, CoordState.ERROR,
+                              CoordState.TERMINATING),
+    CoordState.READY: (CoordState.RUNNING, CoordState.ERROR,
+                       CoordState.TERMINATING),
+    CoordState.RUNNING: (CoordState.SUSPENDED, CoordState.RESTARTING,
+                         CoordState.TERMINATING, CoordState.ERROR),
+    CoordState.SUSPENDED: (CoordState.RESTARTING, CoordState.TERMINATING,
+                           CoordState.ERROR),
+    CoordState.RESTARTING: (CoordState.RUNNING, CoordState.ERROR,
+                            CoordState.TERMINATING),
+    CoordState.TERMINATING: (CoordState.TERMINATED, CoordState.ERROR),
+    CoordState.TERMINATED: (),
+    CoordState.ERROR: (CoordState.TERMINATING, CoordState.RESTARTING),
+}
+
+
+@dataclasses.dataclass
+class CheckpointPolicy:
+    period_s: float = 0.0            # 0 = no periodic checkpoints
+    codec: str = "raw"
+    keep_last: int = 3
+    keep_every: int = 0
+    store: str = "default"           # named storage backend
+
+
+@dataclasses.dataclass
+class ASR:
+    """Application Submission Request (paper §5.1)."""
+    name: str
+    n_vms: int
+    backend: str                     # cloud backend name
+    app_factory: Callable[[], Any]   # () -> Application
+    template: VMTemplate = dataclasses.field(default_factory=VMTemplate)
+    policy: CheckpointPolicy = dataclasses.field(
+        default_factory=CheckpointPolicy)
+    priority: int = 0                # higher preempts lower
+    provision_cmds: tuple = ()       # user-defined provisioning hooks
+    health_hook: Optional[Callable[[], bool]] = None
+
+
+@dataclasses.dataclass
+class Coordinator:
+    coord_id: str
+    asr: ASR
+    state: CoordState = CoordState.CREATING
+    vms: List[VMHandle] = dataclasses.field(default_factory=list)
+    app: Any = None                          # live Application (not persisted)
+    history: List[tuple] = dataclasses.field(default_factory=list)
+    error: Optional[str] = None
+    created_at: float = dataclasses.field(default_factory=time.time)
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+    recoveries: int = 0
+    lock: threading.RLock = dataclasses.field(default_factory=threading.RLock,
+                                              repr=False)
+
+    @property
+    def ckpt_prefix(self) -> str:
+        return f"apps/{self.coord_id}"
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {
+            "id": self.coord_id,
+            "name": self.asr.name,
+            "state": self.state.value,
+            "backend": self.asr.backend,
+            "n_vms": self.asr.n_vms,
+            "vms": [vm.vm_id for vm in self.vms],
+            "priority": self.asr.priority,
+            "error": self.error,
+            "recoveries": self.recoveries,
+            "history": [(t, s) for t, s, *_ in self.history],
+        }
+
+
+class CoordinatorDB:
+    """Thread-safe coordinator database with ObjectStore persistence.
+
+    The paper keeps it in memory (§6.5) and notes it "could be implemented
+    relying on a NoSQL reliable distributed database" (§6.4) — persistence
+    to the reliable object store gives managers the same restartability.
+    """
+
+    def __init__(self, store: Optional[ObjectStore] = None):
+        self._lock = threading.RLock()
+        self._coords: Dict[str, Coordinator] = {}
+        self._store = store
+
+    def create(self, asr: ASR) -> Coordinator:
+        coord = Coordinator(coord_id=fresh_id("coord"), asr=asr)
+        coord.history.append((time.time(), coord.state.value))
+        with self._lock:
+            self._coords[coord.coord_id] = coord
+        self._persist(coord)
+        return coord
+
+    def get(self, coord_id: str) -> Coordinator:
+        with self._lock:
+            if coord_id not in self._coords:
+                raise KeyError(f"unknown coordinator {coord_id}")
+            return self._coords[coord_id]
+
+    def list(self) -> List[Coordinator]:
+        with self._lock:
+            return list(self._coords.values())
+
+    def remove(self, coord_id: str) -> None:
+        with self._lock:
+            self._coords.pop(coord_id, None)
+        if self._store is not None:
+            self._store.delete(f"db/coordinators/{coord_id}.json")
+
+    def transition(self, coord: Coordinator, new: CoordState,
+                   reason: str = "") -> None:
+        with coord.lock:
+            if new not in TRANSITIONS[coord.state]:
+                raise InvalidTransition(
+                    f"{coord.coord_id}: {coord.state.value} -> {new.value}")
+            coord.state = new
+            coord.history.append((time.time(), new.value, reason))
+        self._persist(coord)
+
+    def _persist(self, coord: Coordinator) -> None:
+        if self._store is not None:
+            self._store.put(f"db/coordinators/{coord.coord_id}.json",
+                            json.dumps(coord.to_dict()).encode())
+
+
+class InvalidTransition(RuntimeError):
+    pass

@@ -1,0 +1,94 @@
+"""Cross-cloud migration, cloning and cloudification (paper §5.3, §7.3).
+
+All three scenarios are compositions of the same three REST calls the paper
+uses: POST /coordinators (create), POST .../checkpoints (upload image),
+POST .../checkpoints/:id (restart) — applied across *two service instances*
+running on different cloud backends:
+
+  * ``clone``    — copy a checkpoint image to another cloud and start a
+                   second instance there (source keeps running);
+  * ``migrate``  — clone + terminate the source (paper's migration);
+  * ``cloudify`` — migrate from the Local ("desktop") backend to a cloud
+                   (paper §7.3.1's NS-3 scenario).
+
+Because checkpoint images are topology-agnostic (repro.ckpt.layout), the
+destination may use a different VM count / mesh shape — the JAX analogue of
+migrating between heterogeneous clouds.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Optional
+
+from repro.core.coordinator import ASR, CoordState
+from repro.core.service import CACSService
+
+
+@dataclasses.dataclass
+class MigrationResult:
+    src_id: str
+    dst_id: str
+    step: int
+    checkpoint_s: float
+    transfer_s: float
+    restart_s: float
+
+    @property
+    def total_s(self) -> float:
+        return self.checkpoint_s + self.transfer_s + self.restart_s
+
+
+def clone(src: CACSService, coord_id: str, dst: CACSService, *,
+          backend: str, n_vms: Optional[int] = None,
+          step: Optional[int] = None, fresh_checkpoint: bool = True,
+          ) -> MigrationResult:
+    """Clone a running application onto another cloud (paper §5.3 case 2)."""
+    src_coord = src.db.get(coord_id)
+
+    t0 = time.monotonic()
+    if fresh_checkpoint:
+        step = src.trigger_checkpoint(coord_id, blocking=True)
+    elif step is None:
+        step = src.ckpt.latest(src_coord)
+        if step is None:
+            raise RuntimeError(f"{coord_id} has no checkpoint to clone from")
+    t1 = time.monotonic()
+
+    # 1. POST /coordinators on the destination (do not auto-start the app:
+    #    submission here creates the record; bring-up happens at restart).
+    new_asr = dataclasses.replace(
+        src_coord.asr, backend=backend,
+        n_vms=n_vms if n_vms is not None else src_coord.asr.n_vms)
+    dst_coord = dst.db.create(new_asr)
+
+    # 2. POST .../checkpoints — upload the image (n chunk objects).
+    src_store = src.ckpt.store(src_coord.asr.policy.store)
+    dst.upload_checkpoint(dst_coord.coord_id, src_store,
+                          src_coord.ckpt_prefix, step)
+    t2 = time.monotonic()
+
+    # 3. POST .../checkpoints/:id — restart on the destination cloud.
+    #    Passive recovery allocates + provisions the new virtual cluster.
+    dst.restart_from(dst_coord.coord_id, step)
+    dst.wait_for_state(dst_coord.coord_id, CoordState.RUNNING, timeout=60)
+    t3 = time.monotonic()
+
+    return MigrationResult(
+        src_id=coord_id, dst_id=dst_coord.coord_id, step=step,
+        checkpoint_s=t1 - t0, transfer_s=t2 - t1, restart_s=t3 - t2)
+
+
+def migrate(src: CACSService, coord_id: str, dst: CACSService, *,
+            backend: str, n_vms: Optional[int] = None) -> MigrationResult:
+    """Migration = clone + terminate on the source cloud (paper §5.3)."""
+    result = clone(src, coord_id, dst, backend=backend, n_vms=n_vms)
+    src.delete_coordinator(coord_id)
+    return result
+
+
+def cloudify(local: CACSService, coord_id: str, cloud: CACSService, *,
+             backend: str, n_vms: int) -> MigrationResult:
+    """Desktop -> cloud migration (paper §7.3.1). The app's libraries travel
+    inside the checkpoint image, so the destination needs no preinstall."""
+    return migrate(local, coord_id, cloud, backend=backend, n_vms=n_vms)

@@ -1,0 +1,123 @@
+"""Priority scheduler with job swapping (paper use case 2 / §2.2(4)).
+
+Manages an over-subscribed cloud: when a higher-priority job arrives and
+capacity is insufficient, the lowest-priority RUNNING jobs are *swapped out*
+(checkpointed to stable storage, VMs released). When capacity frees, the
+highest-priority SUSPENDED/queued work resumes — the backfill-lease pattern
+of Marshall et al. [MKF11] that the paper cites.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.coordinator import ASR, CoordState
+from repro.core.service import CACSService
+
+
+class PriorityScheduler:
+    def __init__(self, service: CACSService, backend: str,
+                 tick_s: float = 0.05):
+        self.service = service
+        self.backend = backend
+        self.tick_s = tick_s
+        self._queue: List[Tuple[int, float, ASR]] = []   # (prio, t, asr)
+        self._queued_ids: Dict[str, ASR] = {}
+        self._lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.preemptions = 0
+        self.resumes = 0
+
+    # ------------------------------------------------------------------
+    def submit(self, asr: ASR) -> Optional[str]:
+        """Submit respecting priorities. Returns coord_id if started now,
+        None if queued (a later tick will start it)."""
+        with self._lock:
+            if self._try_make_room(asr):
+                return self.service.submit(asr)
+            self._queue.append((asr.priority, time.monotonic(), asr))
+            self._queue.sort(key=lambda t: (-t[0], t[1]))
+            return None
+
+    def _capacity(self) -> int:
+        return self.service.cloud.capacity(self.backend)
+
+    def _try_make_room(self, asr: ASR) -> bool:
+        """True if asr can start now, preempting lower-priority jobs if
+        needed (and only if that actually frees enough hosts)."""
+        free = self._capacity()
+        if free >= asr.n_vms:
+            return True
+        # candidates: RUNNING jobs with strictly lower priority, lowest first
+        running = [c for c in self.service.db.list()
+                   if c.state == CoordState.RUNNING
+                   and c.asr.priority < asr.priority
+                   and c.asr.backend == self.backend]
+        running.sort(key=lambda c: c.asr.priority)
+        victims = []
+        for c in running:
+            if free >= asr.n_vms:
+                break
+            victims.append(c)
+            free += len(c.vms)
+        if free < asr.n_vms:
+            return False
+        for c in victims:
+            try:
+                self.service.apps.suspend(c.coord_id, reason="preempted")
+                self.preemptions += 1
+            except RuntimeError:
+                return False
+        return True
+
+    # ------------------------------------------------------------------
+    def start(self) -> None:
+        if self._thread is None:
+            self._stop.clear()
+            self._thread = threading.Thread(target=self._loop, daemon=True)
+            self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5)
+            self._thread = None
+
+    def _loop(self) -> None:
+        while not self._stop.wait(self.tick_s):
+            self.tick()
+
+    def tick(self) -> None:
+        """One scheduling pass: start queued work, resume suspended work."""
+        with self._lock:
+            # queued submissions first (highest priority first); blocking
+            # submits serialize capacity claims (no double-start races)
+            still_queued = []
+            for prio, t, asr in self._queue:
+                if self._capacity() >= asr.n_vms:
+                    self.service.submit(asr, block=True)
+                else:
+                    still_queued.append((prio, t, asr))
+            self._queue = still_queued
+            # resume suspended jobs, highest priority first
+            suspended = [c for c in self.service.db.list()
+                         if c.state == CoordState.SUSPENDED
+                         and c.asr.backend == self.backend]
+            suspended.sort(key=lambda c: -c.asr.priority)
+            for c in suspended:
+                if self._capacity() >= c.asr.n_vms:
+                    # don't resume over queued higher-priority work
+                    if any(q[0] > c.asr.priority for q in self._queue):
+                        continue
+                    try:
+                        self.service.apps.resume(c.coord_id, block=True)
+                        self.resumes += 1
+                    except RuntimeError:
+                        pass
+
+    @property
+    def queue_depth(self) -> int:
+        with self._lock:
+            return len(self._queue)

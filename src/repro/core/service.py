@@ -1,0 +1,120 @@
+"""CACS service facade — the paper's REST resource model (Table 1).
+
+Resources:
+  coordinators:  GET /coordinators            -> list_coordinators()
+                 POST /coordinators           -> submit(asr)
+  coordinator:   GET /coordinators/:id        -> get_coordinator(id)
+                 DELETE /coordinators/:id     -> delete_coordinator(id)
+  checkpoints:   GET  .../:id/checkpoints      -> list_checkpoints(id)
+                 POST .../:id/checkpoints      -> trigger_checkpoint(id) or
+                                                  upload_checkpoint(id, ...)
+  checkpoint:    GET  .../checkpoints/:step    -> get_checkpoint(id, step)
+                 POST .../checkpoints/:step    -> restart_from(id, step)
+                 DELETE .../checkpoints/:step  -> delete_checkpoint(id, step)
+
+Requests are handled by a background thread pool (paper §6.5); the facade is
+stateless over CoordinatorDB + object stores, so a crashed service instance
+restarts with no loss (paper §6.4).
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Dict, List, Optional
+
+from repro.ckpt.storage import InMemoryStore, ObjectStore
+from repro.clusters.base import ClusterBackend
+from repro.core.app_manager import AppManager
+from repro.core.checkpoint_manager import CheckpointManager
+from repro.core.cloud_manager import CloudManager
+from repro.core.coordinator import (ASR, Coordinator, CoordinatorDB,
+                                    CoordState)
+from repro.core.provision import ProvisionManager
+
+
+class CACSService:
+    def __init__(self, backends: Dict[str, ClusterBackend],
+                 stores: Optional[Dict[str, ObjectStore]] = None,
+                 db_store: Optional[ObjectStore] = None,
+                 start_daemons: bool = True,
+                 workers: int = 100):
+        stores = stores or {"default": InMemoryStore()}
+        self.db = CoordinatorDB(db_store)
+        self.cloud = CloudManager(backends)
+        self.provision = ProvisionManager()
+        self.ckpt = CheckpointManager(stores)
+        self.apps = AppManager(self.db, self.cloud, self.provision,
+                               self.ckpt, workers=workers)
+        # route native failure notifications (Snooze path, §6.1)
+        for backend in backends.values():
+            if backend.supports_failure_notifications:
+                backend.subscribe_failures(self._native_failure)
+        if start_daemons:
+            self.apps.start_checkpoint_daemon()
+
+    def _native_failure(self, vm) -> None:
+        coord_id = vm.host.owner
+        if coord_id:
+            self.apps.monitor.on_native_failure(coord_id)
+
+    # ---- coordinators resource -----------------------------------------
+    def list_coordinators(self) -> List[Dict[str, Any]]:
+        return [c.to_dict() for c in self.db.list()]
+
+    def submit(self, asr: ASR, block: bool = False) -> str:
+        return self.apps.submit(asr, block=block).coord_id
+
+    # ---- coordinator resource ------------------------------------------
+    def get_coordinator(self, coord_id: str) -> Dict[str, Any]:
+        return self.db.get(coord_id).to_dict()
+
+    def delete_coordinator(self, coord_id: str) -> Dict[str, Any]:
+        return self.apps.terminate(coord_id)
+
+    # ---- checkpoints resource ------------------------------------------
+    def list_checkpoints(self, coord_id: str) -> List[int]:
+        return self.ckpt.list_images(self.db.get(coord_id))
+
+    def trigger_checkpoint(self, coord_id: str, *,
+                           blocking: bool = True) -> int:
+        return self.apps.checkpoint_now(coord_id, blocking=blocking)
+
+    def upload_checkpoint(self, coord_id: str, src_store: ObjectStore,
+                          src_prefix: str, step: int) -> None:
+        self.ckpt.upload_image(self.db.get(coord_id), src_store,
+                               src_prefix, step)
+
+    # ---- checkpoint resource -------------------------------------------
+    def get_checkpoint(self, coord_id: str, step: int) -> Dict[str, Any]:
+        return self.ckpt.image_info(self.db.get(coord_id), step)
+
+    def restart_from(self, coord_id: str, step: Optional[int] = None) -> None:
+        self.apps.restart_from(coord_id, step)
+
+    def delete_checkpoint(self, coord_id: str, step: int) -> None:
+        self.ckpt.delete_image(self.db.get(coord_id), step)
+
+    # ---- convenience -----------------------------------------------------
+    def wait_for_state(self, coord_id: str, state: CoordState,
+                       timeout: float = 30.0) -> Coordinator:
+        deadline = time.monotonic() + timeout
+        while time.monotonic() < deadline:
+            coord = self.db.get(coord_id)
+            if coord.state == state:
+                return coord
+            if coord.state == CoordState.ERROR and state != CoordState.ERROR:
+                raise RuntimeError(
+                    f"{coord_id} entered ERROR: {coord.error}")
+            time.sleep(0.005)
+        raise TimeoutError(
+            f"{coord_id} did not reach {state.value} in {timeout}s "
+            f"(now {self.db.get(coord_id).state.value})")
+
+    def shutdown(self) -> None:
+        self.apps.stop_daemons()
+        for coord in list(self.db.list()):
+            try:
+                if coord.state not in (CoordState.TERMINATED,):
+                    self.apps.terminate(coord.coord_id)
+            except Exception:                      # noqa: BLE001
+                pass
+        self.provision.close()

@@ -1,0 +1,96 @@
+"""Flash-decode — single-token GQA attention over a long KV cache.
+
+The ``long_500k`` serving hot-spot: one query token, KV cache of up to 512k
+slots. The kernel streams the cache HBM->VMEM in ``block_k`` tiles with the
+online-softmax state in VMEM scratch; the dynamic fill position ``pos``
+arrives as a tiny SMEM-resident operand so the same compiled kernel serves
+every decode step (no recompilation as the cache fills).
+
+Grid: (B, Hkv, n_kv_blocks) — all q heads of one kv group are processed
+together as a [g, hd] tile, which keeps the MXU busy despite the single
+token (g = q_per_kv rows instead of 1).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   scale: float, block_k: int, n_kv: int):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)            # [g, hd]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(k_pos <= pos, s, NEG_INF)        # attend to 0..pos
+
+    m_prev, l_prev = m_ref[...], l_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = corr * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def decode_attention_bhd(q: jax.Array, k: jax.Array, v: jax.Array,
+                         pos: jax.Array, *, block_k: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """q: [B,H,hd]; k,v: [B,Hkv,T,hd]; pos: scalar int32 -> [B,H,hd]."""
+    B, H, hd = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    g = H // Hkv
+    block_k = min(block_k, T)
+    assert T % block_k == 0
+    n_kv = T // block_k
+    qg = q.reshape(B, Hkv, g, hd)
+    pos_arr = jnp.asarray(pos, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, scale=1.0 / math.sqrt(hd),
+                               block_k=block_k, n_kv=n_kv)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, n_kv),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),     # pos
+            pl.BlockSpec((1, 1, g, hd), lambda b, h, ki: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ki: (b, h, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd), lambda b, h, ki: (b, h, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, hd), lambda b, h, ki: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, g, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos_arr, qg, k, v)
+    return out.reshape(B, H, hd)

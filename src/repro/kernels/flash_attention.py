@@ -1,0 +1,118 @@
+"""Blocked flash attention (training/prefill) — Pallas TPU kernel.
+
+TPU adaptation of the flash-attention insight (DESIGN.md §5): stream K/V
+HBM->VMEM in ``block_k`` tiles against a resident ``block_q`` query tile,
+with the online-softmax running (m, l, acc) state held in VMEM scratch
+across the innermost grid dimension. Tiles are MXU-aligned (128 lanes);
+GQA is expressed in the index map (q-head h reads kv-head h // q_per_kv),
+so KV tiles are fetched once per q-head group member without replication
+in HBM.
+
+Grid: (B, H, n_q_blocks, n_kv_blocks) — the kv dimension is innermost and
+iterated sequentially per TPU core, which is what makes the VMEM scratch
+accumulator correct.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, window: Optional[int],
+                  kv_len: int, block_q: int, block_k: int, n_kv: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # [bq, hd]
+    k = k_ref[0, 0].astype(jnp.float32)            # [bk, hd]
+    v = v_ref[0, 0].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    rel = q_pos - k_pos
+    mask = k_pos < kv_len
+    if causal:
+        mask &= rel >= 0
+    if window is not None:
+        mask &= rel < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                            # [bq, 1]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # [bq, bk]
+    corr = jnp.exp(m_prev - m_new)                 # [bq, 1]
+    l_new = corr * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        denom = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                         causal: bool = True,
+                         window: Optional[int] = None,
+                         kv_len: Optional[int] = None,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False) -> jax.Array:
+    """q: [B,H,S,hd]; k,v: [B,Hkv,T,hd]. S % block_q == 0, T % block_k == 0."""
+    B, H, S, hd = q.shape
+    Hkv, T = k.shape[1], k.shape[2]
+    g = H // Hkv
+    block_q = min(block_q, S)
+    block_k = min(block_k, T)
+    assert S % block_q == 0 and T % block_k == 0
+    n_q, n_kv = S // block_q, T // block_k
+    if kv_len is None:
+        kv_len = T
+
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / math.sqrt(hd), causal=causal,
+        window=window, kv_len=kv_len, block_q=block_q, block_k=block_k,
+        n_kv=n_kv)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, hd),
+                         lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki, g=g: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, hd),
+                         lambda b, h, qi, ki, g=g: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # l
+            pltpu.VMEM((block_q, hd), jnp.float32),  # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,3 @@
+# NOTE: repro.launch.dryrun must be imported FIRST in a fresh process (it
+# sets XLA_FLAGS for 512 host devices). This package init intentionally
+# imports nothing.

@@ -1,0 +1,241 @@
+"""Roofline accounting from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), per DESIGN/EXPERIMENTS §Roofline:
+  compute    = HLO_FLOPs_per_device / peak_FLOPs_per_chip
+  memory     = HLO_bytes_per_device / HBM_bandwidth
+  collective = collective_bytes_per_device / ICI_link_bandwidth
+
+cost_analysis() reports the per-device (post-SPMD) program, so the terms are
+directly per-chip. Collective bytes are NOT in cost_analysis — they are
+parsed from the optimized HLO text (every all-reduce / all-gather /
+reduce-scatter / all-to-all / collective-permute result buffer).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict, Optional, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+# TPU v5e hardware constants (per chip).
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+_LINE_RE = re.compile(
+    r"=\s*(?P<type>\([^=]*?\)|\S+)\s+"
+    r"(?P<op>all-reduce-start|all-gather-start|collective-permute-start|"
+    r"all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)\(")
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _type_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective type (+ op counts).
+
+    Two adjustments so the CPU-compiled HLO reflects TPU link traffic:
+      * XLA:CPU *promotes* bf16 all-reduces to f32 (``clone_promoted``
+        reduction computations); TPU runs them native bf16 — promoted ARs
+        are counted at half width.
+      * ``total_link_bytes`` weights all-reduce x2 (a ring AR moves
+        ~2x the buffer: reduce-scatter + all-gather phases), others x1 —
+        that is what the ICI link actually carries.
+    """
+    out: Dict[str, int] = {f"{op}_bytes": 0 for op in _COLL_OPS}
+    counts: Dict[str, int] = {f"{op}_count": 0 for op in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op").replace("-start", "")
+        nbytes = _type_bytes(m.group("type"))
+        if "clone_promoted" in line and "f32[" in m.group("type"):
+            nbytes //= 2            # undo CPU-only bf16->f32 AR promotion
+        out[f"{op}_bytes"] += nbytes
+        counts[f"{op}_count"] += 1
+    total = sum(out.values())
+    link = (2 * out["all-reduce_bytes"] + out["all-gather_bytes"]
+            + out["reduce-scatter_bytes"] + out["all-to-all_bytes"]
+            + out["collective-permute_bytes"])
+    return {**out, **counts, "total_bytes": total,
+            "total_link_bytes": link}
+
+
+_DEF_RE = re.compile(r"%(\S+?) = ((?:\([^=]*?\)|\S+)) ([a-z][a-z0-9-]*)\(([^)]*)")
+
+_HEAVY_OPS = frozenset({
+    "dot", "convolution", "gather", "scatter", "scatter-add",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "dynamic-slice", "dynamic-update-slice", "sort",
+})
+
+
+def fused_memory_bytes(hlo_text: str,
+                       score_trailing: Optional[Tuple[int, int]] = None,
+                       ) -> Dict[str, float]:
+    """TPU-fusion-adjusted HBM traffic estimate.
+
+    The CPU backend fuses far less than TPU, so cost_analysis's
+    "bytes accessed" over-counts elementwise chains. This model counts only
+    *fusion-boundary-forcing* ops (dots, gathers/scatters, collectives,
+    dynamic slices): result bytes + operand bytes (operands resolved via
+    the def table).
+
+    ``score_trailing``: if given (e.g. (S, T)), tensors whose trailing dims
+    match attention scores are additionally excluded in the ``flash``
+    variant — modeling the Pallas flash kernel that keeps them in VMEM.
+    """
+    defs: Dict[str, Tuple[int, Tuple[int, ...]]] = {}
+    heavy: list = []
+    for m in _DEF_RE.finditer(hlo_text):
+        name, ty, op, operands = m.groups()
+        nbytes = _type_bytes(ty)
+        dims: Tuple[int, ...] = ()
+        sm = _SHAPE_RE.search(ty)
+        if sm and sm.group(2):
+            dims = tuple(int(d) for d in sm.group(2).split(","))
+        defs[name] = (nbytes, dims)
+        if op in _HEAVY_OPS:
+            heavy.append((op, nbytes, dims, operands))
+
+    def is_score(dims: Tuple[int, ...]) -> bool:
+        return (score_trailing is not None and len(dims) >= 2
+                and dims[-2:] == tuple(score_trailing))
+
+    total = 0.0
+    total_flash = 0.0
+    opnd_re = re.compile(r"%(\S+?)[,)\s]")
+    for op, nbytes, dims, operands in heavy:
+        opnd_bytes = [defs.get(om.group(1), (0, ()))
+                      for om in opnd_re.finditer(operands + ")")]
+        if op == "dynamic-update-slice":
+            # in-place aliased on TPU: traffic = the update operand only
+            upd = opnd_bytes[1][0] if len(opnd_bytes) > 1 else 0
+            total += upd
+            total_flash += upd
+            continue
+        moved = nbytes
+        moved_flash = 0 if is_score(dims) else nbytes
+        for ob, odims in opnd_bytes:
+            moved += ob
+            moved_flash += 0 if is_score(odims) else ob
+        total += moved
+        total_flash += moved_flash
+    return {"fused_bytes": total, "fused_flash_bytes": total_flash}
+
+
+def top_collectives(hlo_text: str, k: int = 15):
+    """The k largest collective ops with sizes + op_name metadata — the
+    dry-run 'profile' used by the §Perf hillclimb."""
+    items = []
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        nbytes = _type_bytes(m.group("type"))
+        meta = ""
+        mm = re.search(r'op_name="([^"]+)"', line)
+        if mm:
+            meta = mm.group(1)[-120:]
+        items.append((nbytes, m.group("op"), meta))
+    items.sort(reverse=True)
+    return items[:k]
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    """Analytic MODEL_FLOPS: 6·N_active·D (train) or 2·N_active·D
+    (prefill/decode) + attention context terms."""
+    N = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    # attention layers and their effective context
+    n_attn, eff_ctx = 0, 0.0
+    from repro.models.transformer import build_group
+    blocks, n_groups = build_group(cfg)
+    for blk in blocks:
+        if blk.kind == "attn":
+            w = blk.spec.window
+            ctx = min(S, w) if w else S
+            n_attn += n_groups
+            eff_ctx += n_groups * ctx
+    H, hd = cfg.n_heads, cfg.head_dim
+    if shape.kind == "train":
+        D = B * S
+        dense = 6.0 * N * D
+        attn = 6.0 * B * S * eff_ctx * H * hd    # causal fwd+bwd (12*0.5)
+        return dense + attn
+    if shape.kind == "prefill":
+        D = B * S
+        return 2.0 * N * D + 2.0 * B * S * eff_ctx * H * hd
+    # decode: one token over a full context
+    return 2.0 * N * B + 4.0 * B * eff_ctx * H * hd
+
+
+def roofline(cost: Dict[str, float], coll: Dict[str, int],
+             cfg: ArchConfig, shape: ShapeConfig,
+             n_chips: int,
+             fused: Optional[Dict[str, float]] = None) -> Dict[str, float]:
+    flops_dev = float(cost.get("flops", 0.0))
+    bytes_dev = float(cost.get("bytes accessed", 0.0))
+    coll_dev = float(coll.get("total_link_bytes", coll["total_bytes"]))
+    t_compute = flops_dev / PEAK_FLOPS
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_dev / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_dev * n_chips
+    out = {
+        "compute_s": t_compute,
+        "memory_s": t_memory,
+        "collective_s": t_coll,
+        "dominant": max(terms, key=terms.get),
+        "model_flops": mf,
+        "hlo_flops_global": hlo_global,
+        "useful_flops_ratio": (mf / hlo_global) if hlo_global else 0.0,
+        "step_bound_s": max(terms.values()),
+        # fraction of roofline: useful work per second at the bound vs peak
+        "roofline_fraction": (
+            (mf / n_chips / PEAK_FLOPS) / max(terms.values())
+            if max(terms.values()) > 0 else 0.0),
+    }
+    if fused is not None:
+        # TPU-fusion-adjusted memory terms (see fused_memory_bytes):
+        #   fused  — elementwise chains fuse; dots/gathers/collectives move
+        #   flash  — additionally, score-shaped tensors stay in VMEM
+        #            (the Pallas flash/decode kernels' contribution)
+        t_mf = fused["fused_bytes"] / HBM_BW
+        t_mfl = fused["fused_flash_bytes"] / HBM_BW
+        terms_f = {"compute": t_compute, "memory": t_mfl,
+                   "collective": t_coll}
+        out.update({
+            "memory_fused_s": t_mf,
+            "memory_flash_s": t_mfl,
+            "dominant_flash": max(terms_f, key=terms_f.get),
+            "step_bound_flash_s": max(terms_f.values()),
+            "roofline_fraction_flash": (
+                (mf / n_chips / PEAK_FLOPS) / max(terms_f.values())
+                if max(terms_f.values()) > 0 else 0.0),
+        })
+    return out

@@ -1,0 +1,263 @@
+"""Cell construction for the multi-pod dry-run: (arch x shape x mesh) ->
+jitted+sharded computation and abstract inputs, then lower/compile/analyze.
+
+No jax device-state side effects at import; callers (dryrun.py) configure
+XLA_FLAGS before importing anything jax-touching.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.launch import analysis
+from repro.models.model import Model, build_model
+from repro.sharding.specs import (MeshAxes, activation_sharding, make_axes,
+                                  param_specs)
+from repro.train.optimizer import AdamWConfig
+from repro.train.trainer import init_state, make_train_step, state_dims
+
+
+def _shardify(tree_sds: Any, dims_tree: Any,
+              mesh: jax.sharding.Mesh, axes: MeshAxes) -> Any:
+    """Attach NamedShardings (from logical dims) to a ShapeDtypeStruct tree."""
+    specs = param_specs(dims_tree, tree_sds, axes)
+    return jax.tree.map(
+        lambda s, spec: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, spec)),
+        tree_sds, specs)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeConfig
+    cfg: ArchConfig
+    kind: str
+    jitted: Any
+    args: Tuple[Any, ...]
+
+
+def _with_depth(cfg: ArchConfig, k_groups: int) -> ArchConfig:
+    """Same arch with the layer stack truncated to k scan groups (and the
+    encoder scaled proportionally) — used for cost extrapolation."""
+    from repro.models.transformer import build_group
+    _, n_groups = build_group(cfg)
+    group_size = cfg.n_layers // n_groups
+    changes: Dict[str, Any] = {"n_layers": k_groups * group_size}
+    if cfg.encoder is not None:
+        unit = max(1, cfg.encoder.n_layers // n_groups)
+        changes["encoder"] = dataclasses.replace(
+            cfg.encoder, n_layers=k_groups * unit)
+    return dataclasses.replace(cfg, **changes)
+
+
+def build_cell(arch: str, shape_name: str, mesh: jax.sharding.Mesh, *,
+               remat: bool = True,
+               fsdp: Optional[bool] = None,
+               seq_shard: Optional[bool] = None,
+               depth_groups: Optional[int] = None) -> Cell:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise SkipCell(why)
+    if depth_groups is not None:
+        cfg = _with_depth(cfg, depth_groups)
+    # Cost probes unroll the stack: XLA cost_analysis counts while-loop
+    # bodies once, so the probe depths must not hide layers inside a scan.
+    model = build_model(cfg, unroll=depth_groups is not None)
+    use_fsdp = cfg.use_fsdp if fsdp is None else fsdp
+    if seq_shard is None:
+        # Megatron-style sequence sharding between blocks: default ON for
+        # train and prefill of attention archs (§Perf iteration D: -53%
+        # memory, -28% collective on internlm2/train_4k) — but OFF for
+        # recurrent stacks (ssm/xlstm): the sequential scan needs the full
+        # sequence locally, and S-sharding it cost jamba a 12x collective
+        # regression (§Perf iteration D2, refuted for hybrids).
+        seq_shard = (shape.kind in ("prefill", "train")
+                     and cfg.ssm is None and cfg.xlstm is None)
+    axes = make_axes(mesh, use_fsdp=use_fsdp, seq_shard=seq_shard)
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.kind == "train":
+        st_sds = jax.eval_shape(
+            lambda: init_state(model, jax.random.PRNGKey(0)))
+        st_sh = _shardify(st_sds, state_dims(model), mesh, axes)
+        batch_sds = _shardify(model.batch_struct(B, S),
+                              model.batch_dims(), mesh, axes)
+        opt = AdamWConfig()
+        grad_specs = param_specs(model.param_dims(),
+                                 st_sds["params"], axes)
+        step_fn = make_train_step(model, opt, axes=axes, remat=remat,
+                                  grad_specs=grad_specs)
+        jitted = jax.jit(step_fn, donate_argnums=(0,),
+                         out_shardings=(
+                             jax.tree.map(lambda s: s.sharding, st_sh),
+                             None))
+        return Cell(arch, shape, cfg, "train", jitted, (st_sh, batch_sds))
+
+    params_sds = _shardify(model.abstract_params(), model.param_dims(),
+                           mesh, axes)
+
+    if shape.kind == "prefill":
+        batch = model.batch_struct(B, S)
+        batch.pop("targets")
+        bdims = model.batch_dims()
+        bdims.pop("targets")
+        batch_sds = _shardify(batch, bdims, mesh, axes)
+
+        def prefill_fn(params, batch):
+            with activation_sharding(axes):
+                return model.prefill(params, batch, cache_len=S)
+
+        jitted = jax.jit(prefill_fn)
+        return Cell(arch, shape, cfg, "prefill", jitted,
+                    (params_sds, batch_sds))
+
+    # decode: one new token against a cache of size seq_len
+    cache_sds = _shardify(model.abstract_cache(B, S), model.cache_dims(),
+                          mesh, axes)
+    tok_spec = P(axes.dp) if B % _axes_size(axes, axes.dp) == 0 else P()
+    token_sds = jax.ShapeDtypeStruct(
+        (B, 1), jnp.int32, sharding=NamedSharding(mesh, tok_spec))
+    pos_sds = jax.ShapeDtypeStruct(
+        (), jnp.int32, sharding=NamedSharding(mesh, P()))
+
+    def serve_step(params, cache, token, pos):
+        with activation_sharding(axes):
+            return model.decode_step(params, cache, token, pos)
+
+    jitted = jax.jit(
+        serve_step, donate_argnums=(1,),
+        out_shardings=(None, jax.tree.map(lambda s: s.sharding, cache_sds)))
+    return Cell(arch, shape, cfg, "decode", jitted,
+                (params_sds, cache_sds, token_sds, pos_sds))
+
+
+def _axes_size(axes: MeshAxes, ax) -> int:
+    import math
+    ax_t = ax if isinstance(ax, tuple) else (ax,)
+    return math.prod(axes.size(a) for a in ax_t)
+
+
+class SkipCell(Exception):
+    pass
+
+
+def _compile_cell(cell: Cell, mesh: jax.sharding.Mesh,
+                  save_hlo: Optional[str] = None):
+    t0 = time.monotonic()
+    with mesh:
+        lowered = cell.jitted.lower(*cell.args)
+    t1 = time.monotonic()
+    compiled = lowered.compile()
+    t2 = time.monotonic()
+
+    mem = compiled.memory_analysis()
+    mem_fields = {}
+    for f in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes"):
+        v = getattr(mem, f, None)
+        if v is not None:
+            mem_fields[f] = int(v)
+    cost = compiled.cost_analysis() or {}
+    cost = {k: float(v) for k, v in cost.items()
+            if isinstance(v, (int, float))}
+    hlo = compiled.as_text()
+    coll = analysis.collective_bytes(hlo)
+    S = cell.shape.seq_len
+    score_trailing = (S, S) if cell.kind in ("train", "prefill") else (1, S)
+    fused = analysis.fused_memory_bytes(hlo, score_trailing=score_trailing)
+    if save_hlo:
+        with open(save_hlo, "w") as f:
+            f.write(hlo)
+    return {
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "cost": cost,
+        "memory_analysis": mem_fields,
+        "collectives": coll,
+        "fused": fused,
+    }
+
+
+def lower_and_analyze(cell_args: Dict[str, Any], mesh: jax.sharding.Mesh,
+                      *, save_hlo: Optional[str] = None,
+                      full_compile: bool = True) -> Dict[str, Any]:
+    """Full analysis of one (arch x shape x mesh) cell.
+
+    1. FULL-depth lower+compile — the dry-run pass/fail proof and the
+       memory analysis (buffer sizes account for loop state correctly).
+    2. Depth-1 and depth-2 compiles — XLA's cost_analysis counts a while
+       (scan) body ONCE regardless of trip count, so per-step FLOPs/bytes/
+       collective bytes are linearly extrapolated from two depths:
+       ``total(G) = c(1) + (G - 1) * (c(2) - c(1))``.
+    """
+    arch, shape_name = cell_args["arch"], cell_args["shape"]
+    bkw = {k: v for k, v in cell_args.items() if k not in ("arch", "shape")}
+    n_chips = mesh.devices.size
+
+    from repro.models.transformer import build_group
+    cfg_full = get_config(arch)
+    _, n_groups = build_group(cfg_full)
+
+    out: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "n_chips": n_chips,
+        "params": cfg_full.param_count(),
+        "active_params": cfg_full.active_param_count(),
+        "n_groups": n_groups,
+    }
+
+    cell_full = build_cell(arch, shape_name, mesh, **bkw)
+    out["kind"] = cell_full.kind
+    if full_compile:
+        full = _compile_cell(cell_full, mesh, save_hlo)
+        out.update({
+            "lower_s": full["lower_s"],
+            "compile_s": full["compile_s"],
+            "memory_analysis": full["memory_analysis"],
+            "collectives_raw": full["collectives"],
+        })
+
+    # cost extrapolation via depth-1 / depth-2 compiles
+    c1 = _compile_cell(build_cell(arch, shape_name, mesh, depth_groups=1,
+                                  **bkw), mesh)
+    c2 = _compile_cell(build_cell(arch, shape_name, mesh, depth_groups=2,
+                                  **bkw), mesh)
+
+    def extrap(v1: float, v2: float) -> float:
+        return v1 + (n_groups - 1) * (v2 - v1)
+
+    flops_dev = extrap(c1["cost"].get("flops", 0.0),
+                       c2["cost"].get("flops", 0.0))
+    bytes_dev = extrap(c1["cost"].get("bytes accessed", 0.0),
+                       c2["cost"].get("bytes accessed", 0.0))
+    coll = {k: (extrap(c1["collectives"][k], c2["collectives"][k])
+                if k.endswith("_bytes") or k == "total_bytes"
+                else extrap(c1["collectives"][k], c2["collectives"][k]))
+            for k in c1["collectives"]}
+    fused = {k: extrap(c1["fused"][k], c2["fused"][k]) for k in c1["fused"]}
+
+    cost = {"flops": flops_dev, "bytes accessed": bytes_dev}
+    roof = analysis.roofline(cost, coll, cell_full.cfg, cell_full.shape,
+                             n_chips, fused=fused)
+    out.update({
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "collectives": coll,
+        "roofline": roof,
+        "extrapolation": {"depth1": c1["cost"], "depth2": c2["cost"],
+                          "n_groups": n_groups},
+    })
+    return out

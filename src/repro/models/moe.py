@@ -1,0 +1,154 @@
+"""Mixture-of-Experts layer with capacity-based, gather/scatter dispatch.
+
+Design notes (TPU adaptation):
+  * Dispatch uses integer gathers/scatters (argsort-free slot assignment via
+    cumulative per-expert counts), NOT one-hot matmuls — so HLO FLOPs reflect
+    real compute and the roofline's MODEL_FLOPS/HLO_FLOPS ratio stays honest.
+  * Tokens are grouped per batch example; expert capacity is per example:
+    ``C = ceil(S * top_k * capacity_factor / E)``. Overflowing tokens are
+    dropped (standard Switch/GShard semantics).
+  * Experts are sharded over the ``ep`` mesh axis; the [B,S,d] -> [B,E,C,d]
+    resharding is the MoE all-to-all, inserted by GSPMD from the sharding
+    constraints below.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import MLPSpec, ParamBuilder, mlp_core, rmsnorm
+from repro.sharding.specs import constrain
+
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    d_model: int
+    cfg: MoEConfig
+    act: str
+    norm_eps: float
+    d_ff_shared: int = 0           # >0: llama4-style shared expert
+
+
+def moe_capacity(seq: int, cfg: MoEConfig) -> int:
+    c = math.ceil(seq * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(4, ((c + 3) // 4) * 4)
+
+
+def moe_init(b: ParamBuilder, spec: MoESpec) -> None:
+    d, m = spec.d_model, spec.cfg
+    b.add("norm", (d,), ("embed_nt",), init="ones")
+    b.add("router", (d, m.num_experts), ("embed_nt", "experts_nt"),
+          scale=0.02)
+    mult_gate = spec.act == "swiglu"
+    if mult_gate:
+        b.add("we_g", (m.num_experts, d, m.d_ff), ("experts", "moe_embed", "moe_ff"))
+    b.add("we_u", (m.num_experts, d, m.d_ff), ("experts", "moe_embed", "moe_ff"))
+    b.add("we_d", (m.num_experts, m.d_ff, d), ("experts", "moe_ff", "moe_embed"),
+          scale=1.0 / math.sqrt(m.d_ff))
+    if spec.d_ff_shared > 0:
+        if mult_gate:
+            b.add("ws_g", (d, spec.d_ff_shared), ("embed", "ff"))
+        b.add("ws_u", (d, spec.d_ff_shared), ("embed", "ff"))
+        b.add("ws_d", (spec.d_ff_shared, d), ("ff", "embed"),
+              scale=1.0 / math.sqrt(spec.d_ff_shared))
+
+
+def _expert_ffn(p: Params, act: str, x_e: jax.Array) -> jax.Array:
+    """x_e: [B, E, C, d] -> [B, E, C, d], per-expert weights [E, d, f]."""
+    if act == "swiglu":
+        g = jnp.einsum("becd,edf->becf", x_e, p["we_g"])
+        u = jnp.einsum("becd,edf->becf", x_e, p["we_u"])
+        h = jax.nn.silu(g) * u
+    elif act == "squared_relu":
+        h = jnp.square(jax.nn.relu(jnp.einsum("becd,edf->becf", x_e, p["we_u"])))
+    else:
+        h = jax.nn.gelu(jnp.einsum("becd,edf->becf", x_e, p["we_u"]))
+    return jnp.einsum("becf,efd->becd", h, p["we_d"])
+
+
+def moe_apply(p: Params, spec: MoESpec, x: jax.Array,
+              ) -> Tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (x + moe(x), aux_loss)."""
+    m = spec.cfg
+    B, S, d = x.shape
+    E, K = m.num_experts, m.top_k
+    C = moe_capacity(S, m)
+    dt = x.dtype
+
+    h = rmsnorm(x, p["norm"], spec.norm_eps)
+
+    # --- routing: matmul in compute dtype, softmax in f32 ------------------
+    # (an f32 [B,S,d] cast of h here sends f32 cotangents back through the
+    # whole MoE block — §Perf MoE iteration)
+    logits = (h @ p["router"].astype(dt)).astype(jnp.float32)  # [B,S,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, expert_idx = jax.lax.top_k(probs, K)              # [B,S,K]
+    if K > 1:
+        gates = gates / (jnp.sum(gates, axis=-1, keepdims=True) + 1e-9)
+
+    # --- slot assignment (order: s-major, k-minor) -------------------------
+    flat_idx = expert_idx.reshape(B, S * K)                  # [B, SK]
+    onehot = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)    # [B, SK, E]
+    pos = jnp.cumsum(onehot, axis=1) - onehot                # count before me
+    pos = jnp.take_along_axis(pos, flat_idx[..., None], axis=-1)[..., 0]  # [B,SK]
+    keep = pos < C
+    slot = jnp.where(keep, flat_idx * C + pos, E * C)        # E*C = drop slot
+
+    # --- dispatch: scatter token index, gather token features -------------
+    binx = jnp.arange(B)[:, None]
+    token_src = jnp.zeros((B, E * C + 1), jnp.int32).at[
+        binx, slot].set(jnp.arange(1, S * K + 1)[None, :], mode="drop")
+    token_src = token_src[:, :E * C]                         # [B, EC]; 0=empty
+    src_s = jnp.clip((token_src - 1) // K, 0, S - 1)
+    x_e = jnp.take_along_axis(h, src_s[..., None], axis=1)   # [B, EC, d]
+    x_e = x_e * (token_src > 0)[..., None].astype(dt)
+    x_e = x_e.reshape(B, E, C, d)
+    # The MoE all-to-all boundary: tokens move dp-sharded -> ep-sharded.
+    # (No-op outside an activation_sharding context.) Named so the
+    # "save_moe" remat policy can pin it — full remat re-executes this
+    # reshard in the backward pass (§Perf MoE iteration).
+    x_e = constrain(x_e, ("dp", "ep", None, None))
+    x_e = checkpoint_name(x_e, "moe_dispatch")
+
+    # --- expert compute ----------------------------------------------------
+    y_e = _expert_ffn(p, spec.act, x_e).reshape(B, E * C, d)
+    y_e = checkpoint_name(y_e, "moe_expert_out")
+
+    # --- combine: gather back to token order -------------------------------
+    # Pull y_e back to dp-sharded token order BEFORE the gather (one clean
+    # ep->dp reshard instead of SPMD improvising per-op), and keep the
+    # whole combine in the compute dtype — f32 gates promoted the entire
+    # [B,S,d] combine chain to f32 (§Perf MoE iteration).
+    y_e = constrain(y_e.reshape(B, E, C, d), ("dp", None, None, None))
+    y_e = y_e.reshape(B, E * C, d)
+    slot_c = jnp.clip(slot, 0, E * C - 1)
+    y_tok = jnp.take_along_axis(y_e, slot_c[..., None], axis=1)  # [B,SK,d]
+    scale = (keep.astype(jnp.float32)
+             * gates.reshape(B, S * K)).astype(dt)[..., None]
+    y_tok = y_tok * scale
+    if K == 1:
+        y = y_tok.reshape(B, S, d)
+    else:
+        y = y_tok.reshape(B, S, K, d).sum(axis=2)
+
+    # --- shared expert ------------------------------------------------------
+    if spec.d_ff_shared > 0:
+        shared = {"wg": p.get("ws_g"), "wu": p["ws_u"], "wd": p["ws_d"]}
+        y = y + mlp_core(shared, MLPSpec(spec.d_model, spec.d_ff_shared,
+                                         spec.act, spec.norm_eps), h)
+
+    # --- load-balancing aux loss (Switch-style) ----------------------------
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(expert_idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = jnp.sum(frac_tokens * mean_probs) * E
+
+    return x + y, aux

@@ -1,0 +1,155 @@
+"""Mamba-1 selective SSM block (jamba's recurrent layer).
+
+TPU adaptation: the selective scan is *chunked* — ``lax.scan`` over chunks of
+``CHUNK`` steps with an in-chunk ``associative_scan``. This bounds live
+buffers to [B, CHUNK, d_inner, N] (VMEM/HBM friendly) while keeping the
+parallel form's O(log CHUNK) depth; the sequential carry between chunks is a
+single [B, d_inner, N] state. Decode is a 1-step recurrence on that state.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import ParamBuilder, rmsnorm
+
+Params = Any
+CHUNK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class MambaSpec:
+    d_model: int
+    cfg: SSMConfig
+    norm_eps: float
+
+    @property
+    def d_inner(self) -> int:
+        return self.cfg.expand * self.d_model
+
+    @property
+    def dt_rank(self) -> int:
+        return max(1, math.ceil(self.d_model / 16))
+
+
+def mamba_init(b: ParamBuilder, spec: MambaSpec) -> None:
+    d, di, R, N = spec.d_model, spec.d_inner, spec.dt_rank, spec.cfg.d_state
+    W = spec.cfg.d_conv
+    b.add("norm", (d,), ("embed_nt",), init="ones")
+    b.add("in_proj", (d, 2 * di), ("embed", "ssm_inner"))
+    b.add("conv_w", (W, di), (None, "ssm_inner_nt"), scale=1.0 / math.sqrt(W))
+    b.add("conv_b", (di,), ("ssm_inner_nt",), init="zeros")
+    b.add("x_proj", (di, R + 2 * N), ("ssm_inner", None))
+    b.add("dt_proj", (R, di), (None, "ssm_inner"), scale=1.0 / math.sqrt(R))
+    b.add("dt_bias", (di,), ("ssm_inner_nt",), init="zeros")
+    b.add("A_log", (di, N), ("ssm_inner_nt", None), init="zeros")
+    b.add("D", (di,), ("ssm_inner_nt",), init="ones")
+    b.add("out_proj", (di, d), ("ssm_inner", "embed"),
+          scale=1.0 / math.sqrt(di))
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: jax.Array = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv. x: [B,S,di]; w: [W,di]. Returns (y, new_state).
+
+    state: [B, W-1, di] — trailing inputs from the previous segment.
+    """
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(W)) + b
+    return y, xp[:, -(W - 1):]
+
+
+def _ssm_inputs(p: Params, spec: MambaSpec, x: jax.Array):
+    """x: [B,S,di] (post-conv, post-silu) -> (dA [B,S,di,N], bx, C)."""
+    N, R = spec.cfg.d_state, spec.dt_rank
+    xdb = x @ p["x_proj"]                                     # [B,S,R+2N]
+    dt_r, Bm, Cm = jnp.split(xdb, [R, R + N], axis=-1)
+    dt = jax.nn.softplus((dt_r @ p["dt_proj"]) + p["dt_bias"])  # [B,S,di]
+    dt = dt.astype(jnp.float32)
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # [di,N]
+    dA = dt[..., None] * A                                    # [B,S,di,N]
+    bx = (dt * x.astype(jnp.float32))[..., None] * Bm.astype(jnp.float32)[:, :, None, :]
+    return dA, bx, Cm.astype(jnp.float32)
+
+
+def _scan_combine(left, right):
+    a1, b1 = left
+    a2, b2 = right
+    return a1 * a2, a2 * b1 + b2
+
+
+def _mamba_forward(p: Params, spec: MambaSpec, x: jax.Array,
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Shared train/prefill forward. Returns (out, cache)."""
+    B, S, d = x.shape
+    di, N = spec.d_inner, spec.cfg.d_state
+    h0 = rmsnorm(x, p["norm"], spec.norm_eps)
+    xin, z = jnp.split(h0 @ p["in_proj"], 2, axis=-1)
+    xc, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    dA, bx, Cm = _ssm_inputs(p, spec, xc)
+
+    nc = max(1, S // CHUNK)
+    Q = S // nc
+    assert nc * Q == S, f"seq {S} not divisible into chunks of {Q}"
+
+    def chunk_body(h_carry, inp):
+        dA_c, bx_c, C_c = inp                                 # [B,Q,di,N],[B,Q,N]
+        decay = jnp.exp(dA_c)
+        a_cum, b_cum = jax.lax.associative_scan(
+            _scan_combine, (decay, bx_c), axis=1)
+        h_all = a_cum * h_carry[:, None] + b_cum              # [B,Q,di,N]
+        y = jnp.einsum("bqdn,bqn->bqd", h_all, C_c)
+        return h_all[:, -1], y
+
+    reshape = lambda t: jnp.moveaxis(
+        t.reshape(B, nc, Q, *t.shape[2:]), 1, 0)              # [nc,B,Q,...]
+    h_init = jnp.zeros((B, di, N), jnp.float32)
+    h_last, ys = jax.lax.scan(chunk_body, h_init,
+                              (reshape(dA), reshape(bx), reshape(Cm)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, di)              # [B,S,di]
+    y = (y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return x + out, {"h": h_last, "conv": conv_state}
+
+
+def mamba_apply(p: Params, spec: MambaSpec, x: jax.Array) -> jax.Array:
+    """Training forward. x: [B,S,d] -> [B,S,d] (with residual)."""
+    return _mamba_forward(p, spec, x)[0]
+
+
+def mamba_prefill(p: Params, spec: MambaSpec, x: jax.Array,
+                  ) -> Tuple[jax.Array, Dict[str, Any]]:
+    return _mamba_forward(p, spec, x)
+
+
+def mamba_cache_init(spec: MambaSpec, batch: int, dtype) -> Dict[str, Any]:
+    di, N, W = spec.d_inner, spec.cfg.d_state, spec.cfg.d_conv
+    return {
+        "h": jnp.zeros((batch, di, N), jnp.float32),
+        "conv": jnp.zeros((batch, W - 1, di), dtype),
+    }
+
+
+def mamba_decode(p: Params, spec: MambaSpec, x: jax.Array,
+                 cache: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One-token decode. x: [B,1,d]."""
+    B = x.shape[0]
+    h0 = rmsnorm(x, p["norm"], spec.norm_eps)
+    xin, z = jnp.split(h0 @ p["in_proj"], 2, axis=-1)
+    xc, conv_state = _causal_conv(xin, p["conv_w"], p["conv_b"], cache["conv"])
+    xc = jax.nn.silu(xc)
+    dA, bx, Cm = _ssm_inputs(p, spec, xc)                     # S=1
+    h_new = jnp.exp(dA[:, 0]) * cache["h"] + bx[:, 0]         # [B,di,N]
+    y = jnp.einsum("bdn,bn->bd", h_new, Cm[:, 0])[:, None]
+    y = (y + p["D"].astype(jnp.float32) * xc.astype(jnp.float32)).astype(x.dtype)
+    out = (y * jax.nn.silu(z)) @ p["out_proj"]
+    return x + out, {"h": h_new, "conv": conv_state}

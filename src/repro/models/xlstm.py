@@ -1,0 +1,268 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked-parallel) and sLSTM (scalar
+memory, true recurrence).
+
+TPU adaptation notes (DESIGN.md §2):
+  * mLSTM trains in a chunked linear-attention form: quadratic only within
+    CHUNK-sized tiles, recurrent [B,H,hd,hd] state across tiles — the same
+    HBM->VMEM blocking a TPU kernel would use. We omit the paper's global
+    max-stabilizer across chunks (input gate pre-activations are clipped
+    instead); f32 accumulation keeps this exact within bf16 tolerance.
+  * sLSTM has head-recurrent weights (h_{t-1} enters the gates), which the
+    paper itself notes prevents parallelization — it is computed with
+    ``lax.scan`` over time, with the standard exp-gating stabilizer state m.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import XLSTMConfig
+from repro.models.layers import ParamBuilder, rmsnorm
+
+Params = Any
+CHUNK = 128
+ICLIP = 8.0          # clip on input-gate pre-activation (stabilizer stand-in)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MLSTMSpec:
+    d_model: int
+    n_heads: int
+    cfg: XLSTMConfig
+    norm_eps: float
+
+    @property
+    def d_inner(self) -> int:
+        return int(self.cfg.proj_factor * self.d_model)
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_inner // self.n_heads
+
+
+def mlstm_init(b: ParamBuilder, spec: MLSTMSpec) -> None:
+    d, dm, H, W = spec.d_model, spec.d_inner, spec.n_heads, spec.cfg.conv_width
+    b.add("norm", (d,), ("embed_nt",), init="ones")
+    b.add("up_proj", (d, 2 * dm), ("embed", "xl_inner"))
+    b.add("conv_w", (W, dm), (None, "xl_inner_nt"), scale=1.0 / math.sqrt(W))
+    b.add("conv_b", (dm,), ("xl_inner_nt",), init="zeros")
+    b.add("wq", (dm, dm), ("xl_inner", "xl_inner2"))
+    b.add("wk", (dm, dm), ("xl_inner", "xl_inner2"))
+    b.add("wv", (dm, dm), ("xl_inner", "xl_inner2"))
+    b.add("w_i", (dm, H), ("xl_inner", None), scale=0.02)
+    b.add("w_f", (dm, H), ("xl_inner", None), scale=0.02)
+    b.add("b_i", (H,), (None,), init="zeros")
+    b.add("b_f", (H,), (None,), init="ones")
+    b.add("w_o", (dm, dm), ("xl_inner", "xl_inner2"))
+    b.add("down_proj", (dm, d), ("xl_inner", "embed"),
+          scale=1.0 / math.sqrt(dm))
+
+
+def _mlstm_qkvgates(p: Params, spec: MLSTMSpec, x: jax.Array,
+                    conv_state=None):
+    """x: [B,S,d] -> q,k,v [B,S,H,hd], log_i/log_f [B,S,H], o, z, conv_state."""
+    from repro.models.ssm import _causal_conv
+    B, S, _ = x.shape
+    H, hd = spec.n_heads, spec.head_dim
+    h0 = rmsnorm(x, p["norm"], spec.norm_eps)
+    xu, z = jnp.split(h0 @ p["up_proj"], 2, axis=-1)
+    xc, conv_state = _causal_conv(xu, p["conv_w"], p["conv_b"], conv_state)
+    xc = jax.nn.silu(xc)
+    q = (xc @ p["wq"]).reshape(B, S, H, hd)
+    k = ((xc @ p["wk"]) / math.sqrt(hd)).reshape(B, S, H, hd)
+    v = (xu @ p["wv"]).reshape(B, S, H, hd)
+    log_i = jnp.clip((xc @ p["w_i"] + p["b_i"]).astype(jnp.float32),
+                     -ICLIP, ICLIP)                           # [B,S,H]
+    log_f = jax.nn.log_sigmoid((xc @ p["w_f"] + p["b_f"]).astype(jnp.float32))
+    o = jax.nn.sigmoid(xu @ p["w_o"])                         # [B,S,dm]
+    return q, k, v, log_i, log_f, o, z, conv_state
+
+
+def _mlstm_forward(p: Params, spec: MLSTMSpec, x: jax.Array,
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+    B, S, d = x.shape
+    H, hd = spec.n_heads, spec.head_dim
+    q, k, v, log_i, log_f, o, z, conv_state = _mlstm_qkvgates(p, spec, x)
+
+    nc = max(1, S // CHUNK)
+    Q = S // nc
+    assert nc * Q == S
+
+    resh = lambda t: jnp.moveaxis(t.reshape(B, nc, Q, *t.shape[2:]), 1, 0)
+    qf, kf, vf = (resh(t.astype(jnp.float32)) for t in (q, k, v))
+    lif, lff = resh(log_i), resh(log_f)
+
+    def chunk(carry, inp):
+        C_prev, n_prev = carry                                # [B,H,hd,hd],[B,H,hd]
+        qc, kc, vc, li, lf = inp
+        L = jnp.cumsum(lf, axis=1)                            # [B,Q,H]
+        # intra-chunk decay matrix D[t,s] = exp(L_t - L_s + li_s), s <= t
+        Dlog = L[:, :, None, :] - L[:, None, :, :] + li[:, None, :, :]
+        tri = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+        Dm = jnp.where(tri[None, :, :, None], jnp.exp(Dlog), 0.0)  # [B,t,s,H]
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * Dm
+        y_intra = jnp.einsum("btsh,bshd->bthd", scores, vc)
+        n_intra = jnp.sum(scores, axis=2)                     # [B,Q,H] = q·n (intra)
+        # inter-chunk contribution
+        eL = jnp.exp(L)                                       # [B,Q,H]
+        y_inter = jnp.einsum("bthd,bhde->bthe", qc, C_prev) * eL[..., None]
+        n_inter = jnp.einsum("bthd,bhd->bth", qc, n_prev) * eL  # [B,Q,H]
+        # state update
+        Ltot = L[:, -1]                                       # [B,H]
+        w = jnp.exp(Ltot[:, None] - L + li)                   # [B,Q,H]
+        C_new = (C_prev * jnp.exp(Ltot)[..., None, None]
+                 + jnp.einsum("bshd,bshe,bsh->bhde", kc, vc, w))
+        n_new = (n_prev * jnp.exp(Ltot)[..., None]
+                 + jnp.einsum("bshd,bsh->bhd", kc, w))
+        denom = jnp.maximum(jnp.abs(n_intra + n_inter), 1.0)   # [B,Q,H]
+        h = (y_intra + y_inter) / denom[..., None]            # [B,Q,H,hd]
+        return (C_new, n_new), h
+
+    C0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+    n0 = jnp.zeros((B, H, hd), jnp.float32)
+    (C_f, n_f), hs = jax.lax.scan(chunk, (C0, n0), (qf, kf, vf, lif, lff))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, S, -1).astype(x.dtype)
+    out = ((h * o) * jax.nn.silu(z)) @ p["down_proj"]
+    return x + out, {"C": C_f, "n": n_f, "conv": conv_state}
+
+
+def mlstm_apply(p: Params, spec: MLSTMSpec, x: jax.Array) -> jax.Array:
+    return _mlstm_forward(p, spec, x)[0]
+
+
+def mlstm_prefill(p: Params, spec: MLSTMSpec, x: jax.Array,
+                  ) -> Tuple[jax.Array, Dict[str, Any]]:
+    return _mlstm_forward(p, spec, x)
+
+
+def mlstm_cache_init(spec: MLSTMSpec, batch: int, dtype) -> Dict[str, Any]:
+    H, hd, W = spec.n_heads, spec.head_dim, spec.cfg.conv_width
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), jnp.float32),
+        "n": jnp.zeros((batch, H, hd), jnp.float32),
+        "conv": jnp.zeros((batch, W - 1, spec.d_inner), dtype),
+    }
+
+
+def mlstm_decode(p: Params, spec: MLSTMSpec, x: jax.Array,
+                 cache: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any]]:
+    B = x.shape[0]
+    q, k, v, log_i, log_f, o, z, conv_state = _mlstm_qkvgates(
+        p, spec, x, cache["conv"])
+    qf, kf, vf = (t[:, 0].astype(jnp.float32) for t in (q, k, v))  # [B,H,hd]
+    i_g = jnp.exp(log_i[:, 0])[..., None]                     # [B,H,1]
+    f_g = jnp.exp(log_f[:, 0])[..., None]
+    C_new = f_g[..., None] * cache["C"] + i_g[..., None] * (
+        kf[..., :, None] * vf[..., None, :])                  # [B,H,hd,hd]
+    n_new = f_g * cache["n"] + i_g * kf
+    y = jnp.einsum("bhd,bhde->bhe", qf, C_new)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n_new)), 1.0)
+    h = (y / denom[..., None]).reshape(B, 1, -1).astype(x.dtype)
+    out = ((h * o) * jax.nn.silu(z)) @ p["down_proj"]
+    return x + out, {"C": C_new, "n": n_new, "conv": conv_state}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SLSTMSpec:
+    d_model: int
+    n_heads: int
+    norm_eps: float
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def d_ff(self) -> int:
+        return ((int(4 * self.d_model / 3) + 63) // 64) * 64
+
+
+def slstm_init(b: ParamBuilder, spec: SLSTMSpec) -> None:
+    d, H, hd = spec.d_model, spec.n_heads, spec.head_dim
+    b.add("norm", (d,), ("embed_nt",), init="ones")
+    b.add("wx", (d, 4 * d), ("embed", "xl_inner"))            # z,i,f,o fused
+    b.add("r", (4, H, hd, hd), (None, None, None, None), scale=1.0 / math.sqrt(hd))
+    b.add("bias", (4 * d,), ("xl_inner_nt",), init="zeros")
+    b.add("wff_u", (d, spec.d_ff), ("embed", "ff"))
+    b.add("wff_d", (spec.d_ff, d), ("ff", "embed"),
+          scale=1.0 / math.sqrt(spec.d_ff))
+
+
+def _slstm_cell(p: Params, spec: SLSTMSpec, xw: jax.Array, state):
+    """One step. xw: [B, 4d] (precomputed x projections + bias)."""
+    B = xw.shape[0]
+    H, hd, d = spec.n_heads, spec.head_dim, spec.d_model
+    c, n, h, m = state                                        # each [B, d] (f32)
+    hh = h.reshape(B, H, hd)
+    rz, ri, rf, ro = (jnp.einsum("bhd,hde->bhe", hh, p["r"][j]).reshape(B, d)
+                      for j in range(4))
+    z_r, i_r, f_r, o_r = jnp.split(xw, 4, axis=-1)
+    z = jnp.tanh(z_r + rz)
+    i_log = jnp.clip(i_r + ri, -ICLIP, ICLIP)
+    f_log = jax.nn.log_sigmoid(f_r + rf)
+    o = jax.nn.sigmoid(o_r + ro)
+    m_new = jnp.maximum(f_log + m, i_log)
+    i_p = jnp.exp(i_log - m_new)
+    f_p = jnp.exp(f_log + m - m_new)
+    c_new = f_p * c + i_p * z
+    n_new = f_p * n + i_p
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return c_new, n_new, h_new, m_new
+
+
+def _slstm_forward(p: Params, spec: SLSTMSpec, x: jax.Array,
+                   ) -> Tuple[jax.Array, Dict[str, Any]]:
+    B, S, d = x.shape
+    h0 = rmsnorm(x, p["norm"], spec.norm_eps)
+    xw = (h0 @ p["wx"] + p["bias"]).astype(jnp.float32)       # [B,S,4d]
+
+    def step(state, xw_t):
+        state = _slstm_cell(p, spec, xw_t, state)
+        return state, state[2]
+
+    init = tuple(jnp.zeros((B, d), jnp.float32) for _ in range(4))
+    (c, n, hl, m), hs = jax.lax.scan(step, init, jnp.moveaxis(xw, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).astype(x.dtype)                # [B,S,d]
+    x = x + h
+    # post-block gelu FFN (xLSTM sLSTM block uses a 4/3 up-projection MLP)
+    hf = rmsnorm(x, p["norm"], spec.norm_eps)
+    out = x + jax.nn.gelu(hf @ p["wff_u"]) @ p["wff_d"]
+    return out, {"c": c, "n": n, "h": hl, "m": m}
+
+
+def slstm_apply(p: Params, spec: SLSTMSpec, x: jax.Array) -> jax.Array:
+    return _slstm_forward(p, spec, x)[0]
+
+
+def slstm_prefill(p: Params, spec: SLSTMSpec, x: jax.Array,
+                  ) -> Tuple[jax.Array, Dict[str, Any]]:
+    return _slstm_forward(p, spec, x)
+
+
+def slstm_cache_init(spec: SLSTMSpec, batch: int, dtype) -> Dict[str, Any]:
+    d = spec.d_model
+    return {k: jnp.zeros((batch, d), jnp.float32) for k in ("c", "n", "h", "m")}
+
+
+def slstm_decode(p: Params, spec: SLSTMSpec, x: jax.Array,
+                 cache: Dict[str, Any]) -> Tuple[jax.Array, Dict[str, Any]]:
+    h0 = rmsnorm(x, p["norm"], spec.norm_eps)
+    xw = (h0[:, 0] @ p["wx"] + p["bias"]).astype(jnp.float32)
+    state = (cache["c"], cache["n"], cache["h"], cache["m"])
+    c, n, h, m = _slstm_cell(p, spec, xw, state)
+    x = x + h[:, None].astype(x.dtype)
+    hf = rmsnorm(x, p["norm"], spec.norm_eps)
+    out = x + jax.nn.gelu(hf @ p["wff_u"]) @ p["wff_d"]
+    return out, {"c": c, "n": n, "h": h, "m": m}

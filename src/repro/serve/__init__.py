@@ -1,0 +1,3 @@
+from repro.serve.engine import Engine, ServeApp
+
+__all__ = ["Engine", "ServeApp"]

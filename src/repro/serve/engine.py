@@ -1,0 +1,161 @@
+"""Serving engine: batched prefill + decode with donated caches.
+
+Also hosts ``ServeApp`` — a CACS-managed inference job whose checkpoint
+state is {params, KV/SSM caches, generated tokens}: suspending a *serving*
+job mid-generation and resuming it elsewhere (even on another "cloud") is
+the paper's job-swapping use case applied to inference.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model, build_model
+
+
+class Engine:
+    def __init__(self, model: Model, params: Any, *, cache_len: int = 256):
+        self.model = model
+        self.params = params
+        self.cache_len = cache_len
+        self._decode = jax.jit(model.decode_step, donate_argnums=(1,))
+        self._prefill = jax.jit(
+            lambda p, b: model.prefill(p, b, cache_len=cache_len))
+
+    def prefill(self, batch: Dict[str, jax.Array]):
+        return self._prefill(self.params, batch)
+
+    def decode(self, cache, token, pos):
+        return self._decode(self.params, cache, token, pos)
+
+    def generate(self, batch: Dict[str, jax.Array], n_tokens: int,
+                 *, greedy: bool = True) -> jax.Array:
+        """Prefill the prompt then decode n_tokens greedily. Returns
+        [B, n_tokens] int32."""
+        prompt_len = batch["tokens"].shape[1]
+        if self.model.cfg.frontend is not None \
+                and self.model.cfg.family != "encdec":
+            prompt_len += self.model.cfg.frontend_len
+        logits, cache = self.prefill(batch)
+        out = []
+        token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        out.append(token)
+        for i in range(1, n_tokens):
+            pos = jnp.int32(prompt_len + i - 1)
+            logits, cache = self.decode(cache, token, pos)
+            token = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            out.append(token)
+        return jnp.concatenate(out, axis=1)
+
+
+class ServeApp:
+    """CACS-hosted batched-serving job (checkpointable mid-generation)."""
+
+    def __init__(self, cfg: ArchConfig, *, batch: int = 2,
+                 prompt_len: int = 16, n_tokens: int = 64,
+                 cache_len: int = 128, seed: int = 0,
+                 token_delay_s: float = 0.0):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.batch = batch
+        self.prompt_len = prompt_len
+        self.n_tokens = n_tokens
+        self.cache_len = cache_len
+        self.seed = seed
+        self.token_delay_s = token_delay_s   # rate-limit (tests/demos)
+        self.params: Any = None
+        self.cache: Any = None
+        self.tokens_out: List[np.ndarray] = []
+        self.generated = 0
+        self._last_token = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self._lock = threading.Lock()
+        self.restarts = 0
+
+    def _build(self):
+        if self.params is None:
+            self.params = self.model.init(jax.random.PRNGKey(self.seed))
+        self.engine = Engine(self.model, self.params,
+                             cache_len=self.cache_len)
+
+    def start(self, ctx, restore_state: Optional[Any]) -> None:
+        self._build()
+        if restore_state is not None:
+            with self._lock:
+                self.params = restore_state["params"]
+                self.cache = restore_state["cache"]
+                self.generated = int(restore_state["generated"])
+                self._last_token = jnp.asarray(restore_state["last_token"])
+                self.tokens_out = [np.asarray(restore_state["tokens_out"])] \
+                    if self.generated else []
+            self.engine = Engine(self.model, self.params,
+                                 cache_len=self.cache_len)
+            self.restarts += 1
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+
+    def _run(self) -> None:
+        if self.cache is None:
+            rng = np.random.Generator(np.random.PCG64(self.seed))
+            prompt = rng.integers(
+                0, self.cfg.vocab_size, (self.batch, self.prompt_len)
+            ).astype(np.int32)
+            logits, cache = self.engine.prefill({"tokens": jnp.asarray(prompt)})
+            token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            with self._lock:
+                self.cache = cache
+                self._last_token = token
+                self.tokens_out.append(np.asarray(token))
+                self.generated = 1
+        while not self._stop.is_set() and self.generated < self.n_tokens:
+            if self.token_delay_s:
+                time.sleep(self.token_delay_s)
+            pos = jnp.int32(self.prompt_len + self.generated - 1)
+            # NOTE: cache is donated; keep the swap atomic wrt checkpointing
+            with self._lock:
+                cache, token = self.cache, self._last_token
+                self.cache = None
+            logits, new_cache = self.engine.decode(cache, token, pos)
+            token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            with self._lock:
+                self.cache = jax.block_until_ready(new_cache)
+                self._last_token = token
+                self.tokens_out.append(np.asarray(token))
+                self.generated += 1
+
+    def checkpoint_state(self) -> Dict[str, Any]:
+        while True:
+            with self._lock:
+                if self.cache is not None:
+                    return {
+                        "params": self.params,
+                        "cache": self.cache,
+                        "generated": self.generated,
+                        "last_token": self._last_token,
+                        "tokens_out": np.concatenate(self.tokens_out, axis=1)
+                        if self.tokens_out else np.zeros((self.batch, 0),
+                                                         np.int32),
+                    }
+            time.sleep(0.001)
+
+    def healthy(self) -> bool:
+        return True
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=60)
+
+    def is_done(self) -> bool:
+        return self.generated >= self.n_tokens
+
+    def progress(self) -> float:
+        return self.generated / max(self.n_tokens, 1)

@@ -1,0 +1,5 @@
+from repro.sharding.specs import (MeshAxes, activation_sharding, constrain,
+                                  leaf_spec, make_axes, param_specs)
+
+__all__ = ["MeshAxes", "activation_sharding", "constrain", "leaf_spec",
+           "make_axes", "param_specs"]

@@ -1,0 +1,8 @@
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   global_norm, lr_at, opt_state_dims)
+from repro.train.trainer import (TrainerApp, init_state, make_train_step,
+                                 state_dims)
+
+__all__ = ["AdamWConfig", "adamw_init", "adamw_update", "global_norm",
+           "lr_at", "opt_state_dims", "TrainerApp", "init_state",
+           "make_train_step", "state_dims"]

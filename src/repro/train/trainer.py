@@ -1,0 +1,151 @@
+"""Training loop + the CACS-hosted TrainerApp.
+
+``make_train_step`` builds the jitted (and, under a mesh, fully sharded)
+train step used by both the real trainer and the multi-pod dry-run.
+
+``TrainerApp`` adapts a JAX training job to the CACS Application protocol —
+the 2026 analogue of the paper's long-running MPI application: it is
+checkpointed/suspended/migrated by the service without knowing how, and its
+health hook reports NaN losses and stalls (paper §6.3: only the application
+knows what "healthy" means).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.data.pipeline import TokenPipeline
+from repro.models.model import Model, build_model
+from repro.sharding.specs import MeshAxes, activation_sharding
+from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                   opt_state_dims)
+
+
+def init_state(model: Model, key: jax.Array) -> Dict[str, Any]:
+    params = model.init(key)
+    return {"params": params, "opt_state": adamw_init(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def state_dims(model: Model) -> Dict[str, Any]:
+    pd = model.param_dims()
+    return {"params": pd, "opt_state": opt_state_dims(pd), "step": ()}
+
+
+def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
+                    axes: Optional[MeshAxes] = None, remat: bool = True,
+                    grad_specs=None):
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``grad_specs``: optional PartitionSpec tree for the gradients. Pinning
+    grads to the param sharding right at the autodiff boundary lets SPMD
+    emit reduce-scatters instead of full all-reduces for FSDP-sharded
+    weight grads (§Perf MoE iteration: 2.7GB AR -> 170MB RS per layer).
+    """
+
+    def train_step(state, batch):
+        with activation_sharding(axes):
+            (loss, aux), grads = jax.value_and_grad(
+                lambda p: model.loss(p, batch, remat=remat),
+                has_aux=True)(state["params"])
+            if grad_specs is not None:
+                grads = jax.lax.with_sharding_constraint(grads, grad_specs)
+            params, opt_state, om = adamw_update(
+                opt_cfg, grads, state["opt_state"], state["params"])
+        metrics = {"loss": loss, **aux, **om}
+        return ({"params": params, "opt_state": opt_state,
+                 "step": state["step"] + 1}, metrics)
+
+    return train_step
+
+
+class TrainerApp:
+    """A real JAX training job hosted by CACS.
+
+    Checkpoint state is {"state": {params, opt_state, step}, "data": iterator
+    state} — restoring it resumes the exact token stream and optimizer
+    trajectory (verified bit-exact in tests).
+    """
+
+    def __init__(self, cfg: ArchConfig, *, global_batch: int = 4,
+                 seq_len: int = 64, n_steps: int = 50,
+                 opt: Optional[AdamWConfig] = None, seed: int = 0,
+                 remat: bool = True):
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.opt_cfg = opt or AdamWConfig(warmup_steps=5, total_steps=n_steps)
+        self.n_steps = n_steps
+        self.seed = seed
+        self.pipeline = TokenPipeline(cfg, global_batch, seq_len, seed=seed)
+        self._train_step = jax.jit(
+            make_train_step(self.model, self.opt_cfg, remat=remat))
+        self._state: Optional[Dict[str, Any]] = None
+        self._state_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.last_loss: float = float("nan")
+        self.losses: list = []
+        self.step_times: list = []
+        self.restarts = 0
+        self._started = False
+
+    # ---- Application protocol ------------------------------------------
+    def start(self, ctx, restore_state: Optional[Any]) -> None:
+        if restore_state is not None:
+            with self._state_lock:
+                self._state = restore_state["state"]
+                self.pipeline.load_state_dict(restore_state["data"])
+            self.restarts += 1
+        elif self._state is None:
+            self._state = init_state(self.model, jax.random.PRNGKey(self.seed))
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._run, daemon=True)
+        self._thread.start()
+        self._started = True
+
+    def _run(self) -> None:
+        while not self._stop.is_set() and self.current_step < self.n_steps:
+            t0 = time.monotonic()
+            batch = self.pipeline.next()
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            new_state, metrics = self._train_step(self._state, batch)
+            loss = float(metrics["loss"])
+            with self._state_lock:
+                self._state = jax.block_until_ready(new_state)
+            self.last_loss = loss
+            self.losses.append(loss)
+            self.step_times.append(time.monotonic() - t0)
+
+    @property
+    def current_step(self) -> int:
+        st = self._state
+        return int(st["step"]) if st is not None else 0
+
+    def checkpoint_state(self) -> Dict[str, Any]:
+        with self._state_lock:
+            state = self._state
+            data = dict(self.pipeline.state_dict())
+            data["step"] = int(state["step"])     # align stream with params
+        return {"state": state, "data": data}
+
+    def healthy(self) -> bool:
+        if not self.losses:
+            return True
+        return bool(np.isfinite(self.last_loss))
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=60)
+
+    def is_done(self) -> bool:
+        return self.current_step >= self.n_steps
+
+    def progress(self) -> float:
+        return self.current_step / max(self.n_steps, 1)

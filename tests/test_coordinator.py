@@ -1,0 +1,69 @@
+"""Coordinator state machine + DB invariants (property-based)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.ckpt import InMemoryStore
+from repro.core import (ASR, CoordinatorDB, CoordState, InvalidTransition,
+                        SimulatedApp)
+from repro.core.coordinator import TRANSITIONS
+
+
+def _asr():
+    return ASR(name="t", n_vms=1, backend="x",
+               app_factory=lambda: SimulatedApp())
+
+
+def test_legal_lifecycle():
+    db = CoordinatorDB()
+    c = db.create(_asr())
+    for s in (CoordState.PROVISIONING, CoordState.READY, CoordState.RUNNING,
+              CoordState.SUSPENDED, CoordState.RESTARTING, CoordState.RUNNING,
+              CoordState.TERMINATING, CoordState.TERMINATED):
+        db.transition(c, s)
+    assert [h[1] for h in c.history][0] == "CREATING"
+    assert c.state == CoordState.TERMINATED
+
+
+def test_illegal_transitions_raise():
+    db = CoordinatorDB()
+    c = db.create(_asr())
+    with pytest.raises(InvalidTransition):
+        db.transition(c, CoordState.RUNNING)          # CREATING -> RUNNING
+    db.transition(c, CoordState.PROVISIONING)
+    with pytest.raises(InvalidTransition):
+        db.transition(c, CoordState.SUSPENDED)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.sampled_from(list(CoordState)), min_size=1, max_size=12))
+def test_state_machine_closure_property(walk):
+    """Random transition walks: every accepted transition is in the table;
+    TERMINATED is absorbing; history length == accepted transitions + 1."""
+    db = CoordinatorDB()
+    c = db.create(_asr())
+    accepted = 0
+    for target in walk:
+        prev = c.state
+        try:
+            db.transition(c, target)
+            assert target in TRANSITIONS[prev]
+            accepted += 1
+        except InvalidTransition:
+            assert target not in TRANSITIONS[prev]
+            assert c.state == prev
+    assert len(c.history) == accepted + 1
+    if CoordState.TERMINATED in [h for _, h, *_ in []]:
+        pass
+    assert TRANSITIONS[CoordState.TERMINATED] == ()
+
+
+def test_db_persistence():
+    store = InMemoryStore()
+    db = CoordinatorDB(store)
+    c = db.create(_asr())
+    db.transition(c, CoordState.PROVISIONING)
+    keys = store.list("db/coordinators/")
+    assert len(keys) == 1
+    assert b"PROVISIONING" in store.get(keys[0])
+    db.remove(c.coord_id)
+    assert not store.list("db/coordinators/")

@@ -1,0 +1,116 @@
+"""Dry-run machinery on a small mesh (subprocess, 8 devices): lowering,
+sharded compile, collective parsing, roofline math."""
+import pytest
+
+from tests.conftest import run_subprocess
+
+
+def test_collective_parser():
+    from repro.launch.analysis import collective_bytes
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(%p0), replica_groups={{0,1}}
+  %ar.1 = f32[256]{0} all-reduce(%x), to_apply=%add
+  %t = (f32[16,16]{1,0}, f32[4]{0}) all-to-all(%a, %b)
+  %cp = u8[1024]{0} collective-permute(%c)
+  %ard = f32[256]{0} all-reduce-done(%ars)
+  %other = f32[999]{0} add(%x, %y)
+"""
+    out = collective_bytes(hlo)
+    assert out["all-gather_bytes"] == 8 * 128 * 2
+    assert out["all-reduce_bytes"] == 256 * 4
+    assert out["all-to-all_bytes"] == 16 * 16 * 4 + 4 * 4
+    assert out["collective-permute_bytes"] == 1024
+    per_op = {k: v for k, v in out.items()
+              if k.endswith("_bytes")
+              and k not in ("total_bytes", "total_link_bytes")}
+    assert out["total_bytes"] == sum(per_op.values())
+    # link accounting: ring all-reduce moves ~2x the buffer
+    assert out["total_link_bytes"] == (out["total_bytes"]
+                                       + out["all-reduce_bytes"])
+
+
+def test_collective_parser_promoted_ar():
+    """XLA:CPU-promoted bf16->f32 all-reduces count at native bf16 width."""
+    from repro.launch.analysis import collective_bytes
+    hlo = ('  %ar = f32[256]{0} all-reduce(%c), '
+           'to_apply=%add.clone_promoted\n')
+    out = collective_bytes(hlo)
+    assert out["all-reduce_bytes"] == 256 * 4 // 2
+
+
+def test_roofline_terms():
+    from repro.configs import SHAPES, get_config
+    from repro.launch.analysis import HBM_BW, LINK_BW, PEAK_FLOPS, roofline
+    cfg = get_config("internlm2-1.8b")
+    shape = SHAPES["train_4k"]
+    cost = {"flops": PEAK_FLOPS, "bytes accessed": HBM_BW}
+    coll = {"total_bytes": LINK_BW}
+    r = roofline(cost, coll, cfg, shape, n_chips=256)
+    assert abs(r["compute_s"] - 1.0) < 1e-9
+    assert abs(r["memory_s"] - 1.0) < 1e-9
+    assert abs(r["collective_s"] - 1.0) < 1e-9
+    assert r["model_flops"] > 6 * cfg.param_count() * 256 * 4096 * 0.9
+
+
+def test_small_mesh_sharded_train_step_runs():
+    """Not just lower/compile — actually EXECUTE a sharded train step on an
+    8-device mesh and check loss finiteness + param sharding layout."""
+    run_subprocess("""
+    import dataclasses
+    import jax, jax.numpy as jnp, numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.configs import get_config, reduced
+    from repro.data.pipeline import TokenPipeline
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import build_model
+    from repro.sharding.specs import make_axes, param_specs
+    from repro.train import AdamWConfig, init_state, make_train_step
+    from repro.train.trainer import state_dims
+
+    cfg = dataclasses.replace(reduced(get_config("llama4-scout-17b-a16e")),
+                              dtype="float32")
+    model = build_model(cfg)
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    axes = make_axes(mesh, use_fsdp=True)
+    step = jax.jit(make_train_step(model, AdamWConfig(), axes=axes))
+    sds = jax.eval_shape(lambda: init_state(model, jax.random.PRNGKey(0)))
+    specs = param_specs(state_dims(model), sds, axes)
+    sh = jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                      is_leaf=lambda x: isinstance(x, P))
+    state = jax.device_put(init_state(model, jax.random.PRNGKey(0)), sh)
+    pipe = TokenPipeline(cfg, 4, 32, seed=0)
+    with mesh:
+        for _ in range(2):
+            b = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+            state, m = step(state, b)
+    assert np.isfinite(float(m["loss"]))
+    # MoE expert weights must actually be expert-sharded over 'model'
+    we = state["params"]["stack"]["l0_moe"]["we_u"]
+    assert "model" in str(we.sharding.spec), we.sharding
+    print("loss", float(m["loss"]))
+    """, devices=8, timeout=560)
+
+
+def test_dryrun_cell_on_small_mesh():
+    """build_cell + lower_and_analyze end-to-end on a 2x4 mesh."""
+    run_subprocess("""
+    import json
+    import repro.launch.lowering as low
+    from repro.launch.mesh import make_test_mesh
+
+    # shrink the production shapes through the same code path
+    import repro.configs as C
+    mesh = make_test_mesh((2, 4), ("data", "model"))
+    cell_args = dict(arch="internlm2-1.8b", shape="train_4k")
+    # monkeypatch the shape grid to a tiny stand-in for CPU speed
+    import repro.configs.base as base
+    tiny = base.ShapeConfig("train_4k", 256, 8, "train")
+    C.SHAPES["train_4k"] = tiny
+    low.SHAPES["train_4k"] = tiny
+    out = low.lower_and_analyze(cell_args, mesh, full_compile=True)
+    assert out["flops_per_device"] > 0
+    assert out["roofline"]["dominant"] in ("compute", "memory", "collective")
+    assert out["memory_analysis"]["argument_size_in_bytes"] > 0
+    assert 0 < out["roofline"]["useful_flops_ratio"] < 2.0
+    print(json.dumps(out["roofline"]))
+    """, devices=8, timeout=560)

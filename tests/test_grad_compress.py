@@ -1,0 +1,43 @@
+"""Cross-pod compressed gradient reduction (subprocess: 8 devices)."""
+from tests.conftest import run_subprocess
+
+
+def test_compressed_pod_reduction_matches_reference():
+    run_subprocess("""
+    import dataclasses, jax, jax.numpy as jnp
+    from repro.configs import get_config, reduced
+    from repro.data.pipeline import TokenPipeline
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import build_model
+    from repro.sharding.specs import make_axes
+    from repro.train import AdamWConfig, init_state, make_train_step
+    from repro.train.grad_compress import make_compressed_train_step
+
+    cfg = dataclasses.replace(reduced(get_config('internlm2-1.8b')),
+                              dtype='float32')
+    model = build_model(cfg)
+    mesh = make_test_mesh((2, 2, 2), ('pod', 'data', 'model'))
+    axes = make_axes(mesh)
+    opt = AdamWConfig(warmup_steps=1, total_steps=4)
+    ref_step = jax.jit(make_train_step(model, opt, axes=axes))
+    pipe = TokenPipeline(cfg, 8, 32, seed=0)
+    batch = {k: jnp.asarray(v) for k, v in pipe.next().items()}
+    state0 = init_state(model, jax.random.PRNGKey(0))
+    with mesh:
+        s1, m1 = ref_step(state0, batch)
+
+    def delta(s2):
+        return max(float(jnp.max(jnp.abs(
+            a.astype(jnp.float32) - b.astype(jnp.float32))))
+            for a, b in zip(jax.tree.leaves(s1['params']),
+                            jax.tree.leaves(s2['params'])))
+
+    for codec, tol in (('none', 1e-5), ('bf16', 5e-3), ('int8', 1e-2)):
+        step = jax.jit(make_compressed_train_step(
+            model, opt, mesh, axes=axes, codec=codec))
+        with mesh:
+            s2, m2 = step(init_state(model, jax.random.PRNGKey(0)), batch)
+        assert abs(float(m2['loss']) - float(m1['loss'])) < 1e-5
+        assert delta(s2) < tol, (codec, delta(s2))
+    print('OK')
+    """, devices=8, timeout=560)

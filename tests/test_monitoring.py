@@ -1,0 +1,62 @@
+"""Monitoring: broadcast-tree scaling, straggler z-scores, health hooks."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.clusters import SnoozeBackend
+from repro.core.monitoring import heartbeat_roundtrip, tree_depth
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 4096))
+def test_tree_depth_is_log2(n):
+    d = tree_depth(n)
+    assert 2 ** d >= n + 1 or d == 1
+    assert d <= math.ceil(math.log2(n + 1)) + 1
+
+
+def test_heartbeat_rtt_logarithmic():
+    backend = SnoozeBackend(n_hosts=256)
+    rtts = {}
+    for n in (1, 16, 256):
+        vms = backend.allocate_vms(n, None, owner="t")
+        rtts[n] = heartbeat_roundtrip(vms, lambda: True).rtt_s
+        backend.terminate_vms(vms)
+    # 256 nodes costs ~8/5 of 16 nodes, NOT 16x — the tree's whole point
+    assert rtts[256] < 2.2 * rtts[16]
+    assert rtts[256] < 10 * rtts[1]
+
+
+def test_unreachable_vms_reported():
+    backend = SnoozeBackend(n_hosts=8)
+    vms = backend.allocate_vms(4, None, owner="t")
+    backend.sim.fail_host(vms[2].host.host_id)
+    rep = heartbeat_roundtrip(vms, lambda: True)
+    assert rep.unreachable == [vms[2].vm_id]
+    assert not rep.ok
+
+
+def test_health_hook_failure_reported():
+    backend = SnoozeBackend(n_hosts=8)
+    vms = backend.allocate_vms(2, None, owner="t")
+    rep = heartbeat_roundtrip(vms, lambda: False)
+    assert rep.unhealthy and not rep.ok
+
+
+def test_straggler_zscore():
+    backend = SnoozeBackend(n_hosts=32)
+    vms = backend.allocate_vms(16, None, owner="t")
+    backend.sim.degrade_host(vms[3].host.host_id, slowdown=50.0)
+    rep = heartbeat_roundtrip(vms, lambda: True)
+    assert rep.stragglers == [vms[3].vm_id]
+    assert rep.ok            # a straggler is not a failure
+
+
+def test_uniform_slowness_is_not_straggling():
+    backend = SnoozeBackend(n_hosts=8)
+    vms = backend.allocate_vms(4, None, owner="t")
+    for vm in vms:
+        backend.sim.degrade_host(vm.host.host_id, slowdown=5.0)
+    rep = heartbeat_roundtrip(vms, lambda: True)
+    assert not rep.stragglers

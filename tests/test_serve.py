@@ -1,0 +1,82 @@
+"""Serving engine + CACS-hosted serving: suspend/resume mid-generation must
+not change the generated token stream."""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import InMemoryStore
+from repro.clusters import SnoozeBackend
+from repro.configs import get_config, reduced
+from repro.core import ASR, CACSService, CheckpointPolicy, CoordState
+from repro.models import build_model
+from repro.serve.engine import Engine, ServeApp
+
+CFG = dataclasses.replace(reduced(get_config("repro-100m")), dtype="float32")
+
+
+def test_engine_generate_shapes():
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = Engine(model, params, cache_len=48)
+    toks = jnp.ones((2, 16), jnp.int32)
+    out = engine.generate({"tokens": toks}, 8)
+    assert out.shape == (2, 8)
+    assert out.dtype == jnp.int32
+    assert int(out.max()) < model.vocab_padded
+
+
+def test_generate_deterministic():
+    model = build_model(CFG)
+    params = model.init(jax.random.PRNGKey(0))
+    e1 = Engine(model, params, cache_len=48)
+    e2 = Engine(model, params, cache_len=48)
+    toks = jnp.asarray(
+        np.random.default_rng(0).integers(0, CFG.vocab_size, (1, 16)),
+        jnp.int32)
+    np.testing.assert_array_equal(np.asarray(e1.generate({"tokens": toks}, 8)),
+                                  np.asarray(e2.generate({"tokens": toks}, 8)))
+
+
+def test_serve_app_suspend_resume_token_stream_unchanged():
+    """Job-swapping applied to inference: the interrupted stream equals the
+    uninterrupted one."""
+    n_tokens = 24
+    ref = ServeApp(CFG, batch=1, prompt_len=8, n_tokens=n_tokens,
+                   cache_len=40)
+    ref.start(None, None)
+    while not ref.is_done():
+        time.sleep(0.02)
+    ref.stop()
+    ref_tokens = ref.checkpoint_state()["tokens_out"]
+
+    backend = SnoozeBackend(4)
+    svc = CACSService({"snooze": backend}, {"default": InMemoryStore()})
+    try:
+        asr = ASR(name="serve", n_vms=1, backend="snooze",
+                  app_factory=lambda: ServeApp(CFG, batch=1, prompt_len=8,
+                                               n_tokens=n_tokens,
+                                               cache_len=40,
+                                               token_delay_s=0.1),
+                  policy=CheckpointPolicy(period_s=0))
+        cid = svc.submit(asr)
+        svc.wait_for_state(cid, CoordState.RUNNING, 60)
+        coord = svc.db.get(cid)
+        while coord.app.generated < 4:
+            time.sleep(0.02)
+        svc.apps.suspend(cid)
+        gen_at_suspend = coord.app.generated
+        assert gen_at_suspend < n_tokens
+        svc.apps.resume(cid)
+        coord = svc.db.get(cid)
+        while not coord.app.is_done():
+            time.sleep(0.05)
+        out = coord.app.checkpoint_state()["tokens_out"]
+        assert coord.app.restarts == 1
+        np.testing.assert_array_equal(out[:, :ref_tokens.shape[1]],
+                                      ref_tokens)
+    finally:
+        svc.shutdown()
