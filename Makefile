@@ -1,0 +1,19 @@
+# CACS reproduction — developer entry points.
+#
+#   make test         tier-1 test suite (the command ROADMAP.md pins)
+#   make bench-smoke  fast benchmark subset proving the measurement paths
+#   make docs-lint    sanity-check docs: files exist, internal refs resolve
+
+PY      ?= python
+PYPATH  := src
+
+.PHONY: test bench-smoke docs-lint
+
+test:
+	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
+
+bench-smoke:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only table2,table2incr,ckpt_path
+
+docs-lint:
+	$(PY) scripts/docs_lint.py

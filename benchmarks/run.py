@@ -13,7 +13,8 @@ import sys
 import time
 import traceback
 
-ALL = ("fig3", "table2", "fig4", "fig5", "fig6", "ckpt_path")
+ALL = ("fig3", "table2", "table2incr", "fig4", "fig5", "fig6",
+       "ckpt_path")
 
 
 def main() -> None:
@@ -24,11 +25,13 @@ def main() -> None:
     only = set(args.only.split(",")) if args.only else set(ALL)
 
     from benchmarks import (ckpt_path, fig3_scalability, fig4_service_load,
-                            fig5_migration, fig6_backends, table2_image_size)
+                            fig5_migration, fig6_backends,
+                            table2_image_size, table2_incremental)
 
     modules = {
         "fig3": fig3_scalability,
         "table2": table2_image_size,
+        "table2incr": table2_incremental,
         "fig4": fig4_service_load,
         "fig5": fig5_migration,
         "fig6": fig6_backends,

@@ -1,0 +1,34 @@
+"""Docs sanity check (make docs-lint).
+
+Verifies the project docs exist and that every backtick-quoted file
+reference in them points at a real file — READMEs rot fastest through
+renamed modules, so dangling references fail the build.
+"""
+import pathlib
+import re
+import sys
+
+DOCS = ("README.md", "docs/architecture.md")
+ROOTS = ("", "src/repro/", "src/")
+
+
+def main() -> int:
+    bad = 0
+    for doc in DOCS:
+        p = pathlib.Path(doc)
+        if not p.is_file():
+            print(f"missing required doc: {doc}")
+            bad = 1
+            continue
+        text = p.read_text()
+        for ref in re.findall(r"`([\w./-]+\.(?:py|md))`", text):
+            if not any(pathlib.Path(root + ref).exists() for root in ROOTS):
+                print(f"{doc}: dangling file reference {ref!r}")
+                bad = 1
+    if not bad:
+        print("docs-lint OK")
+    return bad
+
+
+if __name__ == "__main__":
+    sys.exit(main())

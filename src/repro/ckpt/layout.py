@@ -5,10 +5,22 @@ addressed by *global offsets* — never mesh coordinates. Any process on any
 mesh can therefore restore any leaf under any sharding by reading the
 overlapping chunks (reader.py). This is the paper's "compile for the common
 denominator" portability rule applied to device topologies (DESIGN.md §2).
+
+Two chunk layouts coexist (see docs/architecture.md):
+  * format v1 (legacy): chunks live under their step directory
+    (``<prefix>/step_<n>/chunks/<leaf>::o<off>``) and are private to one step.
+  * format v2 (content-addressed): chunks live in a shared namespace keyed by
+    the blake2b digest of their *encoded* bytes
+    (``<prefix>/cas/<digest>``) and may be shared by any number of steps —
+    the substrate for incremental checkpointing (writer.py skips the put for
+    any chunk whose digest is already stored).
+``Manifest.from_json`` loads both; v1 manifests simply carry ``hash=None``
+chunks.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -22,6 +34,8 @@ except ImportError:                               # pragma: no cover
 
 MANIFEST = "MANIFEST.json"
 COMMITTED = "COMMITTED"
+CAS_DIR = "cas"
+FORMAT_VERSION = 2                    # content-addressed chunks
 
 
 def np_dtype(name: str) -> np.dtype:
@@ -85,6 +99,7 @@ class ChunkInfo:
     shape: Tuple[int, ...]
     key: str                          # store key of the chunk object
     nbytes: int                       # encoded size
+    hash: Optional[str] = None        # blake2b digest of encoded bytes (v2)
 
 
 @dataclasses.dataclass
@@ -103,6 +118,7 @@ class Manifest:
     leaves: Dict[str, LeafInfo]
     skeleton: Any
     metadata: Dict[str, Any]
+    version: int = FORMAT_VERSION
 
     def to_json(self) -> str:
         def enc(o):
@@ -110,6 +126,14 @@ class Manifest:
                 return dataclasses.asdict(o)
             raise TypeError(o)
         return json.dumps(dataclasses.asdict(self), default=enc)
+
+    def chunk_refs(self) -> Dict[str, int]:
+        """store key -> number of references from this manifest."""
+        refs: Dict[str, int] = {}
+        for li in self.leaves.values():
+            for c in li.chunks:
+                refs[c.key] = refs.get(c.key, 0) + 1
+        return refs
 
     @staticmethod
     def from_json(s: str) -> "Manifest":
@@ -119,12 +143,13 @@ class Manifest:
                 name=li["name"], shape=tuple(li["shape"]), dtype=li["dtype"],
                 kind=li["kind"],
                 chunks=[ChunkInfo(tuple(c["offset"]), tuple(c["shape"]),
-                                  c["key"], c["nbytes"])
+                                  c["key"], c["nbytes"], c.get("hash"))
                         for c in li["chunks"]])
             for name, li in d["leaves"].items()
         }
         return Manifest(step=d["step"], codec=d["codec"], leaves=leaves,
-                        skeleton=d["skeleton"], metadata=d["metadata"])
+                        skeleton=d["skeleton"], metadata=d["metadata"],
+                        version=d.get("version", 1))
 
 
 def step_prefix(prefix: str, step: int) -> str:
@@ -133,8 +158,23 @@ def step_prefix(prefix: str, step: int) -> str:
 
 def chunk_key(prefix: str, step: int, leaf: str,
               offset: Sequence[int]) -> str:
+    """Format-v1 (step-private) chunk key; kept for full / legacy saves."""
     off = "o" + "_".join(str(int(o)) for o in offset) if offset else "o0"
     return f"{step_prefix(prefix, step)}/chunks/{leaf}::{off}"
+
+
+def chunk_digest(data: bytes) -> str:
+    """Content address of an encoded chunk (hex blake2b-160)."""
+    return hashlib.blake2b(data, digest_size=20).hexdigest()
+
+
+def cas_prefix(prefix: str) -> str:
+    return f"{prefix}/{CAS_DIR}/"
+
+
+def cas_key(prefix: str, digest: str) -> str:
+    """Format-v2 content-addressed chunk key (shared across steps)."""
+    return f"{cas_prefix(prefix)}{digest}"
 
 
 # ---------------------------------------------------------------------------

@@ -16,8 +16,8 @@ import numpy as np
 
 from repro.ckpt import compression
 from repro.ckpt.layout import (COMMITTED, MANIFEST, LeafInfo, Manifest,
-                               build_from_skeleton, leaf_items, np_dtype,
-                               step_prefix)
+                               build_from_skeleton, cas_key, chunk_digest,
+                               leaf_items, np_dtype, step_prefix)
 from repro.ckpt.storage import ObjectStore
 
 _STEP_RE = re.compile(r"step_(\d+)/COMMITTED$")
@@ -63,15 +63,35 @@ def _overlap(dst_off: Tuple[int, ...], dst_shape: Tuple[int, ...],
     return tuple(dst_sl), tuple(src_sl)
 
 
-def _read_chunk(store: ObjectStore, li: LeafInfo, chunk, codec: str
-                ) -> np.ndarray:
-    raw = compression.decode(store.get(chunk.key), np_dtype(li.dtype), codec)
+def _read_chunk(store: ObjectStore, li: LeafInfo, chunk, codec: str,
+                prefix: Optional[str] = None) -> np.ndarray:
+    """Fetch + decode one chunk, resolving by content hash when possible.
+
+    v2 chunks carry a digest: if the manifest's key is missing (e.g. an
+    image cloned under a different prefix) the chunk is re-resolved from
+    the local CAS namespace, and fetched bytes are verified against the
+    digest before decode — end-to-end integrity on the restore path.
+    """
+    key = chunk.key
+    try:
+        data = store.get(key)
+    except (KeyError, FileNotFoundError):
+        if not (chunk.hash and prefix is not None):
+            raise
+        key = cas_key(prefix, chunk.hash)
+        data = store.get(key)
+    if chunk.hash is not None and chunk_digest(data) != chunk.hash:
+        raise ValueError(
+            f"leaf {li.name}: chunk {key} content digest mismatch "
+            f"(corrupt object or hash collision)")
+    raw = compression.decode(data, np_dtype(li.dtype), codec)
     return np.frombuffer(raw, dtype=np_dtype(li.dtype)).reshape(chunk.shape)
 
 
 def _assemble_region(store: ObjectStore, li: LeafInfo, codec: str,
                      offset: Tuple[int, ...], shape: Tuple[int, ...],
-                     cache: Dict[str, np.ndarray]) -> np.ndarray:
+                     cache: Dict[str, np.ndarray],
+                     prefix: Optional[str] = None) -> np.ndarray:
     """Materialize leaf[offset : offset+shape] from overlapping chunks."""
     out = np.zeros(shape, dtype=np_dtype(li.dtype))
     covered = 0
@@ -81,7 +101,7 @@ def _assemble_region(store: ObjectStore, li: LeafInfo, codec: str,
             continue
         dst_sl, src_sl = ov
         if chunk.key not in cache:
-            cache[chunk.key] = _read_chunk(store, li, chunk, codec)
+            cache[chunk.key] = _read_chunk(store, li, chunk, codec, prefix)
         out[dst_sl] = cache[chunk.key][src_sl]
         covered += int(np.prod([s.stop - s.start for s in dst_sl])) \
             if shape else 1
@@ -95,14 +115,16 @@ def _assemble_region(store: ObjectStore, li: LeafInfo, codec: str,
 
 def _restore_leaf(store: ObjectStore, li: LeafInfo, codec: str,
                   sharding: Optional[jax.sharding.Sharding],
-                  dtype_override=None) -> Any:
+                  dtype_override=None, prefix: Optional[str] = None) -> Any:
     shape = tuple(li.shape)
     cache: Dict[str, np.ndarray] = {}
     if li.kind == "scalar":
-        arr = _assemble_region(store, li, codec, (0,) * len(shape), shape, cache)
+        arr = _assemble_region(store, li, codec, (0,) * len(shape), shape,
+                               cache, prefix)
         return arr.item() if arr.ndim == 0 else arr
     if sharding is None:
-        full = _assemble_region(store, li, codec, (0,) * len(shape), shape, cache)
+        full = _assemble_region(store, li, codec, (0,) * len(shape), shape,
+                                cache, prefix)
         if dtype_override is not None:
             full = full.astype(dtype_override)
         return jax.device_put(full)
@@ -120,7 +142,7 @@ def _restore_leaf(store: ObjectStore, li: LeafInfo, codec: str,
             off.append(start)
             shp.append(stop - start)
         local = _assemble_region(store, li, codec, tuple(off), tuple(shp),
-                                 cache).astype(target_dtype)
+                                 cache, prefix).astype(target_dtype)
         arrays.append(jax.device_put(local, dev))
         devices.append(dev)
     return jax.make_array_from_single_device_arrays(shape, sharding, arrays)
@@ -157,6 +179,6 @@ def restore(store: ObjectStore, prefix: str, step: Optional[int] = None, *,
         leaves[name] = _restore_leaf(
             store, li, manifest.codec,
             shard_by_name.get(name),
-            dtype_by_name.get(name))
+            dtype_by_name.get(name), prefix)
     tree = build_from_skeleton(manifest.skeleton, leaves)
     return tree, manifest

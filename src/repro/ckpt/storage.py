@@ -19,7 +19,19 @@ from typing import Dict, Iterable, List, Optional
 
 
 class ObjectStore:
-    """Abstract flat key/value object store (S3-shaped)."""
+    """Abstract flat key/value object store (S3-shaped).
+
+    Content-addressed (dedup) traffic goes through ``put_if_absent`` /
+    ``delete_unreferenced`` so every backend uniformly tracks dedup
+    hit/miss counters and never deletes a chunk that a live manifest still
+    references (see ckpt/gc.py for how refcounts are derived).
+    """
+
+    # dedup counters (class defaults; first increment creates instance attrs)
+    dedup_hits = 0                    # puts skipped: content already stored
+    dedup_misses = 0                  # puts that actually wrote
+    dedup_bytes_skipped = 0           # encoded bytes NOT rewritten
+    gc_deleted = 0                    # chunks removed by refcount-aware delete
 
     def put(self, key: str, data: bytes) -> None:
         raise NotImplementedError
@@ -42,6 +54,32 @@ class ObjectStore:
             self.delete(k)
             n += 1
         return n
+
+    def put_if_absent(self, key: str, data: bytes) -> bool:
+        """Content-addressed put: skip (and count a dedup hit) when the key
+        already holds this content. Returns True iff data was written."""
+        if self.exists(key):
+            self.dedup_hits += 1
+            self.dedup_bytes_skipped += len(data)
+            return False
+        self.dedup_misses += 1
+        self.put(key, data)
+        return True
+
+    def delete_unreferenced(self, key: str, refcount: int) -> bool:
+        """Refcount-aware delete for shared chunks: remove ``key`` only when
+        no live manifest references it. Returns True iff deleted."""
+        if refcount > 0:
+            return False
+        self.delete(key)
+        self.gc_deleted += 1
+        return True
+
+    def dedup_stats(self) -> Dict[str, int]:
+        return {"dedup_hits": self.dedup_hits,
+                "dedup_misses": self.dedup_misses,
+                "dedup_bytes_skipped": self.dedup_bytes_skipped,
+                "gc_deleted": self.gc_deleted}
 
     # Stores that upload lazily override this to block until durable.
     def flush(self) -> None:

@@ -49,6 +49,9 @@ class CheckpointManager:
                 ckpt_gc.collect(store, coord.ckpt_prefix,
                                 keep_last=pol.keep_last,
                                 keep_every=pol.keep_every)
+                # Writer-side dedup caches are pruned to the latest manifest
+                # after each commit (writer._absorb), so nothing referencing
+                # a swept chunk can survive in them; no invalidation needed.
 
         if blocking:
             save_checkpoint(store, coord.ckpt_prefix, step, state,
@@ -84,7 +87,21 @@ class CheckpointManager:
         nbytes = sum(c.nbytes for li in man.leaves.values()
                      for c in li.chunks)
         return {"step": man.step, "codec": man.codec, "bytes": nbytes,
+                "format_version": man.version,
+                "dedup": man.metadata.get("dedup"),
                 "leaves": len(man.leaves), "metadata": man.metadata}
+
+    def dedup_stats(self, coord: Coordinator) -> Dict[str, int]:
+        """Cumulative incremental-checkpointing counters for one app:
+        store-level dedup hits/misses plus the async writer's cache hits
+        (which never reach the store). bytes_deduped / (bytes_written +
+        bytes_deduped) is the fraction of image bytes incrementality saved."""
+        out = dict(self.store(coord.asr.policy.store).dedup_stats())
+        with self._lock:
+            ck = self._async.get(coord.coord_id)
+        if ck is not None:
+            out.update({f"writer_{k}": v for k, v in ck.stats().items()})
+        return out
 
     def latest(self, coord: Coordinator) -> Optional[int]:
         return latest_step(self.store(coord.asr.policy.store),
@@ -100,32 +117,60 @@ class CheckpointManager:
     # ---- upload (migration ingest; paper §5.3 "upload a checkpoint") ----
     def upload_image(self, coord: Coordinator, src_store: ObjectStore,
                      src_prefix: str, step: int) -> None:
-        """Copy a committed image from another service's store (clone)."""
-        from repro.ckpt.layout import step_prefix
+        """Copy a committed image from another service's store (clone).
+
+        Chunks are resolved through the source *manifest* (content-addressed
+        chunks live outside the step directory), rewritten onto this app's
+        prefix, and deduped on ingest: chunks the destination already holds
+        (e.g. from an earlier clone of the same lineage) are not re-uploaded.
+        """
+        from repro.ckpt.layout import MANIFEST, step_prefix
+        from repro.ckpt.reader import load_manifest as _load
         dst = self.store(coord.asr.policy.store)
-        src_sp = step_prefix(src_prefix, step)
+        man = _load(src_store, src_prefix, step)
         dst_sp = step_prefix(coord.ckpt_prefix, step)
-        keys = [k for k in src_store.list(src_sp)
-                if not k.endswith("COMMITTED")]
-        # chunk/manifest keys embed the prefix — rewrite on copy
-        for k in keys:
-            data = src_store.get(k)
-            new_key = dst_sp + k[len(src_sp):]
-            if k.endswith("MANIFEST.json"):
-                data = data.replace(src_prefix.encode(),
-                                    coord.ckpt_prefix.encode())
-            dst.put(new_key, data)
+        seen = set()
+        for li in man.leaves.values():
+            for c in li.chunks:
+                if c.key in seen:
+                    continue
+                seen.add(c.key)
+                new_key = coord.ckpt_prefix + c.key[len(src_prefix):]
+                if dst.exists(new_key):      # ingest dedup: count, skip the
+                    dst.dedup_hits += 1      # source read entirely
+                    dst.dedup_bytes_skipped += c.nbytes
+                    continue
+                dst.put_if_absent(new_key, src_store.get(c.key))
+        manifest_json = man.to_json().replace(src_prefix, coord.ckpt_prefix)
+        dst.put(f"{dst_sp}/{MANIFEST}", manifest_json.encode())
         dst.flush()
         dst.put(f"{dst_sp}/COMMITTED", b"1")
+        dst.flush()                          # marker durable, like writer.py
 
     def delete_image(self, coord: Coordinator, step: int) -> None:
         from repro.ckpt.layout import step_prefix
-        self.store(coord.asr.policy.store).delete_prefix(
-            step_prefix(coord.ckpt_prefix, step))
+        store = self.store(coord.asr.policy.store)
+        with self._lock:
+            ck = self._async.get(coord.coord_id)
+
+        def _delete():
+            store.delete_prefix(step_prefix(coord.ckpt_prefix, step))
+            # chunks may be shared with surviving steps — sweep, don't
+            # prefix-delete
+            swept = ckpt_gc.sweep_orphans(store, coord.ckpt_prefix)
+            if ck is not None and swept:
+                ck.invalidate(swept)     # a stale dedup hit would commit a
+        if ck is not None:               # manifest pointing at reaped chunks
+            # serialize with in-flight saves: sweeping concurrently could
+            # reap chunks a save has put but not yet committed
+            ck.run_serialized(_delete)
+        else:
+            _delete()
 
     def delete_all(self, coord: Coordinator) -> None:
-        self.store(coord.asr.policy.store).delete_prefix(coord.ckpt_prefix)
         with self._lock:
             ck = self._async.pop(coord.coord_id, None)
         if ck is not None:
-            ck.close()
+            ck.close()                   # drain in-flight save first, or it
+        self.store(coord.asr.policy.store).delete_prefix(coord.ckpt_prefix)
+        # would re-create keys under the prefix after the delete

@@ -13,7 +13,15 @@ running on different cloud backends:
 
 Because checkpoint images are topology-agnostic (repro.ckpt.layout), the
 destination may use a different VM count / mesh shape — the JAX analogue of
-migrating between heterogeneous clouds.
+migrating between heterogeneous clouds. The paper demonstrated this
+Snooze→OpenStack (§7.3.2, Table 3); here any two `clusters/` backends work,
+and `examples/cloud_migration.py` is the §7.3 scenario end-to-end.
+
+Image transfer goes through CheckpointManager.upload_image, which resolves
+chunks via the source manifest and dedups on ingest (content-addressed
+chunks the destination already holds are not re-uploaded) — repeated
+migrations of a slowly-changing job cost only the delta, the same economics
+docs/architecture.md describes for the write path.
 """
 from __future__ import annotations
 

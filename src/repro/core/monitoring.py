@@ -11,7 +11,13 @@ Two mechanisms, mirroring the paper exactly:
 Health ≠ liveness: each application provides a health hook; the monitor also
 derives *performance* health (straggler detection via per-step-time
 z-scores) — the paper's "exceptionally low performance ... proactively
-suspends the job" feature.
+suspends the job" feature (§1, use case 3 of §2.2).
+
+Consumers: `core/app_manager.py` subscribes and maps reports onto the
+paper's two recovery paths — VM failure → replace + restore from latest
+image (§6.3 case 1); application failure → in-place restart (§6.3 case 2).
+The broadcast-tree round-trip cost is measured in
+`benchmarks/fig4_service_load.py` (Fig 4c).
 """
 from __future__ import annotations
 

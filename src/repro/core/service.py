@@ -15,6 +15,15 @@ Resources:
 Requests are handled by a background thread pool (paper §6.5); the facade is
 stateless over CoordinatorDB + object stores, so a crashed service instance
 restarts with no loss (paper §6.4).
+
+This module is the paper's §2 "checkpointing as a service" contract in one
+class: non-invasive (any `core/application.py` Application is accepted),
+cloud-agnostic (backends are named entries in the CloudManager registry,
+§4.2), and the substrate for all four §2.2 use cases — long-running job
+support (1), job swapping under over-subscription (2, via
+`core/scheduler.py`), proactive suspend of degraded jobs (3, via
+`core/monitoring.py`), and cross-cloud migration (4, via
+`core/migration.py`). See README.md for the full paper→module map.
 """
 from __future__ import annotations
 

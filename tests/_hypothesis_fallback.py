@@ -1,0 +1,71 @@
+"""Minimal stand-in for ``hypothesis`` when it isn't installed.
+
+The real library is preferred (install via ``pip install -e .[test]``, see
+pyproject.toml). This shim keeps the property-based tests *runnable* in bare
+environments by drawing a fixed number of pseudo-random examples from a
+seeded RNG — no shrinking, no failure database, but the same assertions run
+over a deterministic sample of the input space.
+
+Only the strategy surface this repo uses is implemented: integers, floats,
+sampled_from, lists, tuples.
+"""
+from __future__ import annotations
+
+
+import random
+from typing import Any, Callable, List
+
+
+class _Strategy:
+    def __init__(self, draw: Callable[[random.Random], Any]):
+        self._draw = draw
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda r: r.randint(min_value, max_value))
+
+    @staticmethod
+    def floats(min_value: float, max_value: float) -> _Strategy:
+        return _Strategy(lambda r: r.uniform(min_value, max_value))
+
+    @staticmethod
+    def sampled_from(elements) -> _Strategy:
+        seq = list(elements)
+        return _Strategy(lambda r: r.choice(seq))
+
+    @staticmethod
+    def lists(elements: _Strategy, min_size: int = 0,
+              max_size: int = 10) -> _Strategy:
+        def draw(r: random.Random) -> List[Any]:
+            return [elements._draw(r)
+                    for _ in range(r.randint(min_size, max_size))]
+        return _Strategy(draw)
+
+    @staticmethod
+    def tuples(*elements: _Strategy) -> _Strategy:
+        return _Strategy(lambda r: tuple(e._draw(r) for e in elements))
+
+
+def settings(max_examples: int = 20, deadline=None, **_ignored):
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats: _Strategy):
+    def deco(fn):
+        def wrapper(*args, **kwargs):
+            n = getattr(wrapper, "_fallback_max_examples", 20)
+            rng = random.Random(0)                 # deterministic examples
+            for _ in range(n):
+                fn(*args, *(s._draw(rng) for s in strats), **kwargs)
+        # NOT functools.wraps: pytest would unwrap to fn's signature and
+        # mistake the strategy-filled parameters for fixtures.
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.is_hypothesis_test = True
+        return wrapper
+    return deco

@@ -6,7 +6,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                        # bare env: seeded fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.ckpt import (AsyncCheckpointer, InMemoryStore, TwoTierStore,
                         latest_step, list_steps, restore, save_checkpoint)

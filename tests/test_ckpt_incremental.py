@@ -1,0 +1,225 @@
+"""Incremental content-addressed checkpointing: dedup on the write path,
+mark-and-sweep GC over shared chunks, legacy-manifest compatibility, and
+end-to-end chunk integrity."""
+import json
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ckpt import (AsyncCheckpointer, InMemoryStore, list_steps,
+                        restore, save_checkpoint)
+from repro.ckpt import gc as ckpt_gc
+from repro.ckpt.layout import (COMMITTED, MANIFEST, cas_prefix,
+                               step_prefix)
+from repro.ckpt.reader import load_manifest
+
+
+def _tree(scale=1.0):
+    return {"w": jnp.arange(4096.0) * scale,
+            "opt": {"m": jnp.ones(512), "v": jnp.ones(512) * 2},
+            "step_count": 7}
+
+
+def test_identical_resave_writes_only_manifest_and_marker():
+    store = InMemoryStore()
+    save_checkpoint(store, "p", 1, _tree())
+    puts_before = store.put_count
+    bytes_before = store.bytes_in
+    man = save_checkpoint(store, "p", 2, _tree())
+    # exactly MANIFEST.json + COMMITTED — zero data chunks
+    assert store.put_count - puts_before == 2
+    keys_written = {k for k in store.list(step_prefix("p", 2))}
+    assert keys_written == {f"{step_prefix('p', 2)}/{MANIFEST}",
+                            f"{step_prefix('p', 2)}/{COMMITTED}"}
+    dd = man.metadata["dedup"]
+    assert dd["bytes_written"] == 0
+    assert dd["dedup_misses"] == 0
+    assert dd["dedup_hits"] == dd["chunks"] == 4
+    # manifest+marker are tiny next to the deduped payload
+    assert store.bytes_in - bytes_before < dd["bytes_deduped"] / 4
+    out, _ = restore(store, "p", 2)
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(4096.0))
+
+
+def test_partial_update_writes_only_dirty_chunks():
+    store = InMemoryStore()
+    save_checkpoint(store, "p", 1, _tree())
+    t = _tree()
+    t["opt"]["m"] = jnp.ones(512) * 3              # dirty exactly one leaf
+    man = save_checkpoint(store, "p", 2, t)
+    dd = man.metadata["dedup"]
+    assert dd["dedup_misses"] == 1
+    assert dd["dedup_hits"] == 3
+    assert dd["bytes_written"] == 512 * 4
+    out, _ = restore(store, "p", 2)
+    np.testing.assert_array_equal(np.asarray(out["opt"]["m"]),
+                                  np.full(512, 3.0, np.float32))
+    # step 1 still restores the old value (chunks weren't overwritten)
+    out1, _ = restore(store, "p", 1)
+    np.testing.assert_array_equal(np.asarray(out1["opt"]["m"]),
+                                  np.ones(512, np.float32))
+
+
+def test_identical_leaves_share_one_chunk():
+    store = InMemoryStore()
+    man = save_checkpoint(store, "p", 1,
+                          {"a": jnp.ones(256), "b": jnp.ones(256)})
+    assert man.leaves["a"].chunks[0].key == man.leaves["b"].chunks[0].key
+    assert man.metadata["dedup"]["dedup_misses"] == 1
+
+
+def test_gc_keeps_shared_chunks_and_sweeps_orphans():
+    store = InMemoryStore()
+    save_checkpoint(store, "p", 1, _tree())        # w, m, v, step_count
+    t2 = _tree()
+    t2["opt"]["m"] = jnp.ones(512) * 9             # new chunk at step 2
+    save_checkpoint(store, "p", 2, t2)
+    n_cas = len(store.list(cas_prefix("p")))
+    deleted = ckpt_gc.collect(store, "p", keep_last=1)
+    assert deleted == [1]
+    # step 1's unique chunk (old m) swept; the 3 shared chunks survive
+    assert len(store.list(cas_prefix("p"))) == n_cas - 1
+    assert list_steps(store, "p") == [2]
+    out, _ = restore(store, "p")
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(4096.0))
+    np.testing.assert_array_equal(np.asarray(out["opt"]["m"]),
+                                  np.full(512, 9.0, np.float32))
+    # idempotent: nothing left to sweep
+    assert ckpt_gc.sweep_orphans(store, "p") == []
+
+
+def test_gc_refcount_shared_across_retained_steps():
+    store = InMemoryStore()
+    for s in (1, 2, 3):
+        save_checkpoint(store, "p", s, _tree())    # all steps share chunks
+    ckpt_gc.collect(store, "p", keep_last=2)       # drops step 1 only
+    for s in (2, 3):
+        out, _ = restore(store, "p", s)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.arange(4096.0))
+
+
+def test_legacy_full_save_still_works_and_loads():
+    store = InMemoryStore()
+    man = save_checkpoint(store, "p", 1, _tree(), incremental=False)
+    assert man.version == 1
+    assert all(c.hash is None for li in man.leaves.values()
+               for c in li.chunks)
+    assert not store.list(cas_prefix("p"))         # chunks live in step dir
+    out, _ = restore(store, "p")
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(4096.0))
+    # incremental save on top of a legacy one: no hashes to dedup against
+    man2 = save_checkpoint(store, "p", 2, _tree())
+    assert man2.metadata["dedup"]["dedup_misses"] == 4
+
+
+def test_pre_hash_manifest_json_loads():
+    """Manifests written before ChunkInfo.hash / Manifest.version exist."""
+    store = InMemoryStore()
+    save_checkpoint(store, "p", 1, {"x": jnp.arange(16.0)},
+                    incremental=False)
+    sp = step_prefix("p", 1)
+    d = json.loads(store.get(f"{sp}/{MANIFEST}").decode())
+    del d["version"]
+    for li in d["leaves"].values():
+        for c in li["chunks"]:
+            del c["hash"]
+    store.put(f"{sp}/{MANIFEST}", json.dumps(d).encode())
+    man = load_manifest(store, "p", 1)
+    assert man.version == 1
+    assert man.leaves["x"].chunks[0].hash is None
+    out, _ = restore(store, "p")
+    np.testing.assert_array_equal(np.asarray(out["x"]), np.arange(16.0))
+
+
+def test_corrupt_chunk_detected_by_digest():
+    store = InMemoryStore()
+    man = save_checkpoint(store, "p", 1, {"x": jnp.arange(16.0)})
+    key = man.leaves["x"].chunks[0].key
+    store.put(key, store.get(key)[:-4] + b"\x00\x00\x00\x00")
+    with pytest.raises(ValueError, match="digest mismatch"):
+        restore(store, "p")
+
+
+def test_async_checkpointer_dedup_counters_and_cache():
+    store = InMemoryStore()
+    ck = AsyncCheckpointer(store, "p", codec="zlib")
+    tree = _tree()
+    ck.save(1, tree)
+    ck.wait()
+    puts_after_first = store.put_count
+    for s in (2, 3):
+        ck.save(s, tree)
+    ck.wait()
+    st = ck.stats()
+    assert st["dedup_hits"] == 8                   # 4 chunks x 2 resaves
+    # resaves put only manifest+marker
+    assert store.put_count - puts_after_first == 4
+    # the raw cache served the hits: store never even saw the content again
+    assert store.dedup_hits == 0
+    ck.close()
+    for s in (1, 2, 3):
+        out, _ = restore(store, "p", s)
+        np.testing.assert_array_equal(np.asarray(out["w"]),
+                                      np.arange(4096.0))
+
+
+def test_async_cache_survives_gc_of_old_steps():
+    """A chunk swept by GC must not be served from a stale writer cache."""
+    store = InMemoryStore()
+    ck = AsyncCheckpointer(store, "p")
+    a, b = {"x": jnp.ones(256)}, {"x": jnp.ones(256) * 2}
+
+    def on_commit(_step):
+        ckpt_gc.collect(store, "p", keep_last=1)
+    ck.save(1, a, on_commit=on_commit)
+    ck.save(2, b, on_commit=on_commit)             # GC sweeps step 1's chunk
+    ck.save(3, a, on_commit=on_commit)             # content of step 1 returns
+    ck.wait()
+    out, _ = restore(store, "p", 3)
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  np.ones(256, np.float32))
+    ck.close()
+
+
+def test_delete_image_invalidates_writer_dedup_cache():
+    """CheckpointManager.delete_image sweeps shared chunks; a later save of
+    the same content must re-upload them, not dedup against reaped keys."""
+    from types import SimpleNamespace
+
+    from repro.core.checkpoint_manager import CheckpointManager
+
+    store = InMemoryStore()
+    mgr = CheckpointManager({"default": store})
+    coord = SimpleNamespace(
+        coord_id="c1", ckpt_prefix="p",
+        asr=SimpleNamespace(name="app", policy=SimpleNamespace(
+            store="default", codec="raw", keep_last=0, keep_every=0)))
+    tree = {"x": jnp.ones(256)}
+    mgr.save(coord, 1, tree, blocking=False)
+    mgr.wait(coord)
+    mgr.delete_image(coord, 1)                     # sweeps x's only chunk
+    assert store.list(cas_prefix("p")) == []
+    mgr.save(coord, 2, tree, blocking=False)       # same content returns
+    mgr.wait(coord)
+    out = mgr.load(coord, 2)
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  np.ones(256, np.float32))
+    mgr.delete_all(coord)
+
+
+def test_cross_prefix_clone_dedups_on_ingest():
+    """upload_image-style copy: chunk resolution goes through the manifest."""
+    src = InMemoryStore()
+    save_checkpoint(src, "a", 1, _tree())
+    man = load_manifest(src, "a", 1)
+    dst = InMemoryStore()
+    for key in man.chunk_refs():
+        dst.put_if_absent("b" + key[len("a"):], src.get(key))
+    sp = step_prefix("b", 1)
+    dst.put(f"{sp}/{MANIFEST}",
+            man.to_json().replace("a/", "b/").encode())
+    dst.put(f"{sp}/{COMMITTED}", b"1")
+    out, _ = restore(dst, "b")
+    np.testing.assert_array_equal(np.asarray(out["w"]), np.arange(4096.0))

@@ -1,6 +1,9 @@
 """Coordinator state machine + DB invariants (property-based)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                        # bare env: seeded fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.ckpt import InMemoryStore
 from repro.core import (ASR, CoordinatorDB, CoordState, InvalidTransition,

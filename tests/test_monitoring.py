@@ -2,7 +2,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                        # bare env: seeded fallback
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.clusters import SnoozeBackend
 from repro.core.monitoring import heartbeat_roundtrip, tree_depth
