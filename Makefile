@@ -13,7 +13,7 @@ test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
 
 bench-smoke:
-	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only table2,table2incr,ckpt_path
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only table2,table2incr,ckpt_path,pplane
 
 docs-lint:
 	$(PY) scripts/docs_lint.py

@@ -1,0 +1,101 @@
+"""Parallel checkpoint data plane: save/restore speedup vs worker count.
+
+The paper's dominant cost is checkpoint write/read time against the storage
+backend (Table 2, Fig 3b/3c, Fig 6). With content-addressed chunks the work
+is independent per chunk, so the parallel plane (ckpt/plane.py) should turn
+~sum-of-chunks wall time into ~max-of-chunks on any store with network
+cost. This benchmark sweeps workers in {1, 2, 4, 8} over two simulated
+store regimes:
+
+  * latency-bound   — InMemoryStore(latency_s>0): every put/get pays an
+    RTT (the paper's NFS/S3 metadata cost); parallelism overlaps RTTs.
+  * bandwidth-bound — InMemoryStore(bandwidth_bps, private links): every
+    op pays size/bw (object-store ingress per connection); parallelism
+    overlaps transfers.
+
+Emitted per (regime, workers): save_s, restore_s, speedups vs workers=1,
+and bytes_written / stored_mb — which must NOT change with workers (the
+plane reorders work, never the bytes). A final section sweeps
+TwoTierStore upload streams: time-to-durable for the same image over a
+slow remote with 1 vs 4 replication streams.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.ckpt import (DataPlaneConfig, InMemoryStore, TwoTierStore,
+                        restore, save_checkpoint)
+
+N_LEAVES = 24
+LEAF_KB = 96
+WORKERS = (1, 2, 4, 8)
+
+
+def _tree():
+    rng = np.random.Generator(np.random.PCG64(7))
+    return {f"leaf{i:02d}": rng.standard_normal(LEAF_KB * 1024 // 4)
+            .astype(np.float32) for i in range(N_LEAVES)}
+
+
+def _regime_store(regime: str) -> InMemoryStore:
+    if regime == "latency":
+        return InMemoryStore(latency_s=0.008)    # ~one S3 RTT per op
+    return InMemoryStore(bandwidth_bps=30e6)     # ~3.2ms per 96KB chunk
+
+
+REPEATS = 3                                      # best-of, to damp jitter
+
+
+def _sweep(regime: str, tree) -> None:
+    base_save = base_restore = None
+    for n in WORKERS:
+        plane = DataPlaneConfig.with_workers(n)
+        warm = InMemoryStore()               # steady state: spawn the
+        save_checkpoint(warm, "w", 1, tree, plane=plane)   # shared pools
+        restore(warm, "w", plane=plane)      # before timing anything
+        save_s = restore_s = float("inf")
+        for _ in range(REPEATS):
+            store = _regime_store(regime)
+            t0 = time.monotonic()
+            man = save_checkpoint(store, "p", 1, tree, plane=plane)
+            save_s = min(save_s, time.monotonic() - t0)
+            t0 = time.monotonic()
+            out, _ = restore(store, "p", plane=plane)
+            restore_s = min(restore_s, time.monotonic() - t0)
+        for k, v in tree.items():                # bit-identical round-trip
+            np.testing.assert_array_equal(np.asarray(out[k]), v)
+        tag = f"{regime}/workers={n}"
+        emit("pplane", tag, "save_s", save_s)
+        emit("pplane", tag, "restore_s", restore_s)
+        emit("pplane", tag, "bytes_written",
+             man.metadata["dedup"]["bytes_written"])
+        emit("pplane", tag, "stored_mb", store.total_bytes() / 1e6)
+        if n == 1:
+            base_save, base_restore = save_s, restore_s
+        else:
+            emit("pplane", tag, "save_speedup", base_save / save_s)
+            emit("pplane", tag, "restore_speedup", base_restore / restore_s)
+
+
+def _two_tier_streams(tree) -> None:
+    for streams in (1, 4):
+        local = InMemoryStore()
+        remote = InMemoryStore(latency_s=0.003)
+        tt = TwoTierStore(local, remote, upload_streams=streams)
+        t0 = time.monotonic()
+        save_checkpoint(tt, "p", 1, tree,
+                        plane=DataPlaneConfig.with_workers(4))
+        emit("pplane", f"two_tier/streams={streams}", "durable_s",
+             time.monotonic() - t0)
+        tt.close()
+
+
+def run() -> None:
+    tree = _tree()
+    emit("pplane", "image", "mb", N_LEAVES * LEAF_KB / 1024)
+    for regime in ("latency", "bandwidth"):
+        _sweep(regime, tree)
+    _two_tier_streams(tree)

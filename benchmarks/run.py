@@ -5,28 +5,37 @@ benchmarks/common.CSV_ROWS). All benchmarks run the real CACS code paths
 against the cluster simulator (TIME_SCALE-compressed latencies).
 
 Run:  PYTHONPATH=src python -m benchmarks.run [--only fig3,fig5]
+                                              [--json-dir DIR]
+
+--json-dir writes one ``BENCH_<name>.json`` per benchmark (rows + wall
+time) so CI can archive the perf trajectory run over run.
 """
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
 
 ALL = ("fig3", "table2", "table2incr", "fig4", "fig5", "fig6",
-       "ckpt_path")
+       "ckpt_path", "pplane")
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="",
                     help="comma-separated subset of " + ",".join(ALL))
+    ap.add_argument("--json-dir", default="",
+                    help="write BENCH_<name>.json result files here")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(ALL)
 
     from benchmarks import (ckpt_path, fig3_scalability, fig4_service_load,
-                            fig5_migration, fig6_backends,
+                            fig5_migration, fig6_backends, parallel_plane,
                             table2_image_size, table2_incremental)
+    from benchmarks.common import CSV_ROWS
 
     modules = {
         "fig3": fig3_scalability,
@@ -36,21 +45,40 @@ def main() -> None:
         "fig5": fig5_migration,
         "fig6": fig6_backends,
         "ckpt_path": ckpt_path,
+        "pplane": parallel_plane,
     }
     print("bench,param,metric,value")
     failures = 0
     for name in ALL:
         if name not in only:
             continue
+        row_start = len(CSV_ROWS)
         t0 = time.monotonic()
         try:
             modules[name].run()
-            print(f"# {name} done in {time.monotonic() - t0:.1f}s",
-                  flush=True)
+            wall = time.monotonic() - t0
+            print(f"# {name} done in {wall:.1f}s", flush=True)
         except Exception:                          # noqa: BLE001
             failures += 1
             print(f"# {name} FAILED:\n{traceback.format_exc()}",
                   file=sys.stderr, flush=True)
+            continue
+        if args.json_dir:
+            os.makedirs(args.json_dir, exist_ok=True)
+            rows = []
+            for row in CSV_ROWS[row_start:]:
+                # param may itself contain commas (e.g. "codec=x,dirty=y");
+                # bench is comma-free on the left, metric/value on the right
+                bench, rest = row.split(",", 1)
+                rest, value = rest.rsplit(",", 1)
+                param, metric = rest.rsplit(",", 1)
+                rows.append({"param": param, "metric": metric,
+                             "value": float(value)})
+            path = os.path.join(args.json_dir, f"BENCH_{name}.json")
+            with open(path, "w") as f:
+                json.dump({"bench": name, "wall_s": round(wall, 3),
+                           "rows": rows}, f, indent=1)
+            print(f"# wrote {path}", flush=True)
     sys.exit(1 if failures else 0)
 
 

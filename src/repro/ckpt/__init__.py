@@ -1,3 +1,4 @@
+from repro.ckpt.plane import DataPlaneConfig
 from repro.ckpt.reader import latest_step, list_steps, load_manifest, restore
 from repro.ckpt.storage import (InMemoryStore, LocalFSStore, ObjectStore,
                                 TwoTierStore)
@@ -7,5 +8,5 @@ from repro.ckpt import gc
 __all__ = [
     "latest_step", "list_steps", "load_manifest", "restore",
     "InMemoryStore", "LocalFSStore", "ObjectStore", "TwoTierStore",
-    "AsyncCheckpointer", "save_checkpoint", "gc",
+    "AsyncCheckpointer", "save_checkpoint", "gc", "DataPlaneConfig",
 ]

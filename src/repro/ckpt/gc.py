@@ -48,11 +48,14 @@ def sweep_orphans(store: ObjectStore, prefix: str) -> List[str]:
 
 
 def collect(store: ObjectStore, prefix: str, *, keep_last: int = 3,
-            keep_every: int = 0) -> List[int]:
+            keep_every: int = 0, on_swept=None) -> List[int]:
     """Delete old committed checkpoints (mark-and-sweep).
 
     keep_last:  always retain the newest k steps.
     keep_every: additionally retain steps divisible by this (milestones).
+    on_swept:   optional callback receiving the swept CAS keys — writers
+                holding dedup caches use it to invalidate entries whose
+                chunks just disappeared.
     Returns the deleted step numbers.
     """
     steps = list_steps(store, prefix)
@@ -66,5 +69,7 @@ def collect(store: ObjectStore, prefix: str, *, keep_last: int = 3,
         store.delete_prefix(step_prefix(prefix, s))
         deleted.append(s)
     if deleted:
-        sweep_orphans(store, prefix)
+        swept = sweep_orphans(store, prefix)
+        if on_swept is not None and swept:
+            on_swept(swept)
     return deleted

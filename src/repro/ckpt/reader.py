@@ -5,10 +5,23 @@ it under *any* target sharding, reading only the chunks that overlap each
 local shard. This is the mechanism behind the paper's cross-cloud migration
 (§5.3/§7.3): the image format is topology-agnostic, so "migrating" a job to
 a differently-shaped cluster is just a restore under new shardings.
+
+The read path is a prefetching parallel plane (plane.DataPlaneConfig):
+restore first walks every leaf's target regions to enumerate the chunks it
+will need, fans the fetch+decode of those chunks out across
+``fetch_workers`` threads (bounded by ``max_inflight_bytes``), then
+assembles shards in deterministic manifest order from the results. A
+single-flight cache keyed by (store key, dtype, shape) guarantees a chunk
+shared by many shards — or many leaves, as after resharding — is fetched
+exactly once per distinct decode no matter how many workers race for it,
+and each decoded chunk is evicted right after its last assembly use. With
+``fetch_workers=1`` fetches happen inline, serially, in assembly order.
 """
 from __future__ import annotations
 
+import concurrent.futures as cf
 import re
+import threading
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -18,6 +31,7 @@ from repro.ckpt import compression
 from repro.ckpt.layout import (COMMITTED, MANIFEST, LeafInfo, Manifest,
                                build_from_skeleton, cas_key, chunk_digest,
                                leaf_items, np_dtype, step_prefix)
+from repro.ckpt.plane import DataPlaneConfig, shared_executor
 from repro.ckpt.storage import ObjectStore
 
 _STEP_RE = re.compile(r"step_(\d+)/COMMITTED$")
@@ -88,10 +102,120 @@ def _read_chunk(store: ObjectStore, li: LeafInfo, chunk, codec: str,
     return np.frombuffer(raw, dtype=np_dtype(li.dtype)).reshape(chunk.shape)
 
 
-def _assemble_region(store: ObjectStore, li: LeafInfo, codec: str,
-                     offset: Tuple[int, ...], shape: Tuple[int, ...],
-                     cache: Dict[str, np.ndarray],
-                     prefix: Optional[str] = None) -> np.ndarray:
+class _ChunkSource:
+    """Single-flight fetch+decode cache shared by every leaf of one restore.
+
+    ``register`` (planning pass) counts one future assembly use of a chunk
+    and queues its fetch; fetches are admitted onto the worker pool while
+    under ``max_inflight_bytes`` of encoded bytes (prefetch window — the
+    read-path analogue of the writer's ByteBudget, so restoring an image
+    near host-RAM size cannot buffer every decoded chunk at once).
+    ``get`` blocks for the result, force-submitting on demand if assembly
+    runs ahead of the window (which makes the budget deadlock-free);
+    ``release`` drops the decoded array after its last registered use and
+    admits the next queued fetch.
+
+    The cache key is (store key, dtype, shape): the CAS key alone is not
+    enough — two leaves with byte-identical encoded chunks but different
+    shape or dtype share a store key while decoding differently. A chunk
+    reused across shards or leaves (common after resharding) is still
+    fetched exactly once per distinct decode. Without a pool
+    (fetch_workers<=1) fetches run inline at first ``get`` — serial
+    behavior, same cache and eviction.
+    """
+
+    def __init__(self, store: ObjectStore, codec: str,
+                 prefix: Optional[str], pool: Optional[cf.Executor],
+                 max_inflight_bytes: int = 0):
+        self._store = store
+        self._codec = codec
+        self._prefix = prefix
+        self._pool = pool
+        self._budget = max_inflight_bytes
+        self._lock = threading.Lock()
+        self._futs: Dict[tuple, cf.Future] = {}
+        self._cache: Dict[tuple, np.ndarray] = {}
+        self._uses: Dict[tuple, int] = {}
+        self._queue: List[tuple] = []        # (ckey, li, chunk) to submit
+        self._queued: set = set()
+        self._inflight = 0                   # encoded bytes admitted
+
+    @staticmethod
+    def _ckey(li: LeafInfo, chunk) -> tuple:
+        return (chunk.key, li.dtype, tuple(chunk.shape))
+
+    def register(self, li: LeafInfo, chunk) -> None:
+        ck = self._ckey(li, chunk)
+        with self._lock:
+            self._uses[ck] = self._uses.get(ck, 0) + 1
+            if self._pool is not None and ck not in self._queued:
+                self._queued.add(ck)
+                self._queue.append((ck, li, chunk))
+        self._pump()
+
+    def _submit_locked(self, ck, li, chunk) -> cf.Future:
+        self._inflight += max(1, chunk.nbytes)
+        fut = self._pool.submit(_read_chunk, self._store, li, chunk,
+                                self._codec, self._prefix)
+        self._futs[ck] = fut
+        return fut
+
+    def _pump(self) -> None:
+        if self._pool is None:
+            return
+        with self._lock:
+            while self._queue and (self._budget <= 0 or self._inflight == 0
+                                   or self._inflight < self._budget):
+                ck, li, chunk = self._queue.pop(0)
+                # skip stale entries: already admitted (force-submitted by
+                # get() overtaking the window) or fully released — a
+                # resubmit would double-fetch and leak _inflight forever
+                if ck in self._uses and ck not in self._futs \
+                        and ck not in self._cache:
+                    self._submit_locked(ck, li, chunk)
+
+    def get(self, li: LeafInfo, chunk) -> np.ndarray:
+        ck = self._ckey(li, chunk)
+        with self._lock:
+            fut = self._futs.get(ck)
+            if fut is None:
+                if ck in self._cache:
+                    return self._cache[ck]
+                if self._pool is not None:   # ahead of the prefetch window
+                    fut = self._submit_locked(ck, li, chunk)
+        if fut is not None:
+            return fut.result()
+        arr = _read_chunk(self._store, li, chunk, self._codec, self._prefix)
+        with self._lock:
+            self._cache[ck] = arr
+        return arr
+
+    def release(self, li: LeafInfo, chunk) -> None:
+        """Called once per registered use; evicts after the last one."""
+        ck = self._ckey(li, chunk)
+        with self._lock:
+            left = self._uses.get(ck, 0) - 1
+            if left > 0:
+                self._uses[ck] = left
+                return
+            self._uses.pop(ck, None)
+            if self._futs.pop(ck, None) is not None:
+                self._inflight -= max(1, chunk.nbytes)
+            self._cache.pop(ck, None)
+        self._pump()
+
+    def cancel_pending(self) -> None:
+        """Best-effort cancel of queued fetches (aborted restore); fetches
+        already running on the shared pool finish and are discarded."""
+        with self._lock:
+            self._queue.clear()
+            for fut in self._futs.values():
+                fut.cancel()
+
+
+def _assemble_region(source: _ChunkSource, li: LeafInfo,
+                     offset: Tuple[int, ...], shape: Tuple[int, ...]
+                     ) -> np.ndarray:
     """Materialize leaf[offset : offset+shape] from overlapping chunks."""
     out = np.zeros(shape, dtype=np_dtype(li.dtype))
     covered = 0
@@ -100,9 +224,8 @@ def _assemble_region(store: ObjectStore, li: LeafInfo, codec: str,
         if ov is None:
             continue
         dst_sl, src_sl = ov
-        if chunk.key not in cache:
-            cache[chunk.key] = _read_chunk(store, li, chunk, codec, prefix)
-        out[dst_sl] = cache[chunk.key][src_sl]
+        out[dst_sl] = source.get(li, chunk)[src_sl]
+        source.release(li, chunk)            # evicted after its last use
         covered += int(np.prod([s.stop - s.start for s in dst_sl])) \
             if shape else 1
     want = int(np.prod(shape)) if shape else 1
@@ -113,44 +236,57 @@ def _assemble_region(store: ObjectStore, li: LeafInfo, codec: str,
     return out
 
 
-def _restore_leaf(store: ObjectStore, li: LeafInfo, codec: str,
-                  sharding: Optional[jax.sharding.Sharding],
-                  dtype_override=None, prefix: Optional[str] = None) -> Any:
+def _leaf_regions(li: LeafInfo,
+                  sharding: Optional[jax.sharding.Sharding]
+                  ) -> List[Tuple[Optional[Any], Tuple[int, ...],
+                                  Tuple[int, ...]]]:
+    """Target regions [(device_or_None, offset, shape)] this process needs.
+
+    Computed up front (before any fetch) so the restore plane can prefetch
+    exactly the overlapping chunks for every leaf in one pass.
+    """
     shape = tuple(li.shape)
-    cache: Dict[str, np.ndarray] = {}
+    if li.kind == "scalar" or sharding is None:
+        return [(None, (0,) * len(shape), shape)]
+    dim = sharding.devices_indices_map(shape)
+    regions = []
+    for dev in sharding.addressable_devices:
+        off, shp = [], []
+        for sl, d in zip(dim[dev], shape):
+            start = 0 if sl.start is None else int(sl.start)
+            stop = d if sl.stop is None else int(sl.stop)
+            off.append(start)
+            shp.append(stop - start)
+        regions.append((dev, tuple(off), tuple(shp)))
+    return regions
+
+
+def _restore_leaf(source: _ChunkSource, li: LeafInfo,
+                  sharding: Optional[jax.sharding.Sharding],
+                  regions, dtype_override=None) -> Any:
+    shape = tuple(li.shape)
     if li.kind == "scalar":
-        arr = _assemble_region(store, li, codec, (0,) * len(shape), shape,
-                               cache, prefix)
+        arr = _assemble_region(source, li, *regions[0][1:])
         return arr.item() if arr.ndim == 0 else arr
     if sharding is None:
-        full = _assemble_region(store, li, codec, (0,) * len(shape), shape,
-                                cache, prefix)
+        full = _assemble_region(source, li, *regions[0][1:])
         if dtype_override is not None:
             full = full.astype(dtype_override)
         return jax.device_put(full)
     # per-device assembly: read only the chunks each local shard overlaps
     target_dtype = dtype_override or np_dtype(li.dtype)
-    dim = sharding.devices_indices_map(shape)
     arrays = []
-    devices = []
-    for dev in sharding.addressable_devices:
-        index = dim[dev]
-        off, shp = [], []
-        for sl, d in zip(index, shape):
-            start = 0 if sl.start is None else int(sl.start)
-            stop = d if sl.stop is None else int(sl.stop)
-            off.append(start)
-            shp.append(stop - start)
-        local = _assemble_region(store, li, codec, tuple(off), tuple(shp),
-                                 cache, prefix).astype(target_dtype)
+    for dev, off, shp in regions:
+        local = _assemble_region(source, li, off, shp).astype(target_dtype)
         arrays.append(jax.device_put(local, dev))
-        devices.append(dev)
     return jax.make_array_from_single_device_arrays(shape, sharding, arrays)
 
 
 def restore(store: ObjectStore, prefix: str, step: Optional[int] = None, *,
             target: Any = None,
-            shardings: Any = None) -> Tuple[Any, Manifest]:
+            shardings: Any = None,
+            plane: Optional[DataPlaneConfig] = None
+            ) -> Tuple[Any, Manifest]:
     """Restore a checkpoint.
 
     target:    optional pytree (of arrays / ShapeDtypeStructs) fixing the
@@ -158,12 +294,15 @@ def restore(store: ObjectStore, prefix: str, step: Optional[int] = None, *,
                skeleton with stored dtypes.
     shardings: optional pytree of ``jax.sharding.Sharding`` (matching target
                structure or the skeleton) — THE cross-mesh migration hook.
+    plane:     parallel data-plane knobs; fetch_workers concurrent chunk
+               fetch+decodes (None = DataPlaneConfig()).
     """
     if step is None:
         step = latest_step(store, prefix)
         if step is None:
             raise FileNotFoundError(f"no committed checkpoints under {prefix}")
     manifest = load_manifest(store, prefix, step)
+    plane = plane or DataPlaneConfig()
 
     shard_by_name: Dict[str, Any] = {}
     if shardings is not None:
@@ -174,11 +313,31 @@ def restore(store: ObjectStore, prefix: str, step: Optional[int] = None, *,
             if hasattr(leaf, "dtype"):
                 dtype_by_name[name] = leaf.dtype
 
-    leaves: Dict[str, Any] = {}
-    for name, li in manifest.leaves.items():
-        leaves[name] = _restore_leaf(
-            store, li, manifest.codec,
-            shard_by_name.get(name),
-            dtype_by_name.get(name), prefix)
+    pool = None
+    if plane.fetch_workers > 1:
+        pool = shared_executor("fetch", plane.fetch_workers)
+    source = _ChunkSource(store, manifest.codec, prefix, pool,
+                          plane.max_inflight_bytes)
+    try:
+        # plan all leaves first, registering every (region, chunk) use so
+        # the source can prefetch each distinct decode exactly once and
+        # evict it after its last assembly …
+        plans: Dict[str, tuple] = {}
+        for name, li in manifest.leaves.items():
+            regions = _leaf_regions(li, shard_by_name.get(name))
+            plans[name] = regions
+            for chunk in li.chunks:
+                for _, off, shp in regions:
+                    if _overlap(off, shp, chunk.offset, chunk.shape):
+                        source.register(li, chunk)
+        # … then assemble in deterministic manifest order
+        leaves: Dict[str, Any] = {}
+        for name, li in manifest.leaves.items():
+            leaves[name] = _restore_leaf(
+                source, li, shard_by_name.get(name), plans[name],
+                dtype_by_name.get(name))
+    except BaseException:
+        source.cancel_pending()      # don't leave queued fetches running
+        raise
     tree = build_from_skeleton(manifest.skeleton, leaves)
     return tree, manifest

@@ -7,7 +7,12 @@ Three backends mirror the paper's storage design:
   * ``LocalFSStore``  — directory-backed (the paper's "NFS" role).
   * ``TwoTierStore``  — fast local tier + lazy async upload to a remote tier
     (paper §5.2: "written first to local storage, copied later to remote
-    storage on a lazy basis").
+    storage on a lazy basis"), replicated over N concurrent uploader streams.
+
+All stores are safe under the parallel data plane (ckpt/plane.py):
+``put_if_absent`` is atomic per key (an exists+put race between two workers
+can neither double-write nor double-count), and the dedup/GC counters are
+instance-level and lock-protected.
 """
 from __future__ import annotations
 
@@ -15,7 +20,7 @@ import os
 import queue
 import threading
 import time
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Set
 
 
 class ObjectStore:
@@ -25,13 +30,21 @@ class ObjectStore:
     ``delete_unreferenced`` so every backend uniformly tracks dedup
     hit/miss counters and never deletes a chunk that a live manifest still
     references (see ckpt/gc.py for how refcounts are derived).
+
+    Subclasses must call ``super().__init__()`` (counter + lock setup).
     """
 
-    # dedup counters (class defaults; first increment creates instance attrs)
-    dedup_hits = 0                    # puts skipped: content already stored
-    dedup_misses = 0                  # puts that actually wrote
-    dedup_bytes_skipped = 0           # encoded bytes NOT rewritten
-    gc_deleted = 0                    # chunks removed by refcount-aware delete
+    def __init__(self):
+        # dedup counters — instance-level and guarded by _meta_lock so
+        # concurrent writers can't lose updates (the old class-level
+        # defaults made `self.x += 1` a read-copy-update race).
+        self.dedup_hits = 0               # puts skipped: content already stored
+        self.dedup_misses = 0             # puts that actually wrote
+        self.dedup_bytes_skipped = 0      # encoded bytes NOT rewritten
+        self.gc_deleted = 0               # chunks removed by refcount-aware delete
+        self._meta_lock = threading.Lock()
+        self._inflight_cv = threading.Condition(self._meta_lock)
+        self._inflight_puts: Set[str] = set()
 
     def put(self, key: str, data: bytes) -> None:
         raise NotImplementedError
@@ -57,13 +70,30 @@ class ObjectStore:
 
     def put_if_absent(self, key: str, data: bytes) -> bool:
         """Content-addressed put: skip (and count a dedup hit) when the key
-        already holds this content. Returns True iff data was written."""
-        if self.exists(key):
-            self.dedup_hits += 1
-            self.dedup_bytes_skipped += len(data)
-            return False
-        self.dedup_misses += 1
-        self.put(key, data)
+        already holds this content. Returns True iff data was written.
+
+        Atomic per key: a concurrent put_if_absent of the same key waits
+        for the in-flight put instead of racing it, so exactly one caller
+        writes (a miss) and the rest count hits — without serializing puts
+        of *different* keys through one lock (store latency would otherwise
+        flatten the parallel plane back to serial).
+        """
+        with self._inflight_cv:
+            while key in self._inflight_puts:
+                self._inflight_cv.wait()
+            if self.exists(key):
+                self.dedup_hits += 1
+                self.dedup_bytes_skipped += len(data)
+                return False
+            self._inflight_puts.add(key)
+        try:
+            self.put(key, data)
+        finally:
+            with self._inflight_cv:
+                self._inflight_puts.discard(key)
+                self._inflight_cv.notify_all()
+        with self._meta_lock:
+            self.dedup_misses += 1
         return True
 
     def delete_unreferenced(self, key: str, refcount: int) -> bool:
@@ -72,14 +102,23 @@ class ObjectStore:
         if refcount > 0:
             return False
         self.delete(key)
-        self.gc_deleted += 1
+        with self._meta_lock:
+            self.gc_deleted += 1
         return True
 
     def dedup_stats(self) -> Dict[str, int]:
-        return {"dedup_hits": self.dedup_hits,
-                "dedup_misses": self.dedup_misses,
-                "dedup_bytes_skipped": self.dedup_bytes_skipped,
-                "gc_deleted": self.gc_deleted}
+        with self._meta_lock:
+            return {"dedup_hits": self.dedup_hits,
+                    "dedup_misses": self.dedup_misses,
+                    "dedup_bytes_skipped": self.dedup_bytes_skipped,
+                    "gc_deleted": self.gc_deleted}
+
+    def count_ingest_hit(self, nbytes: int) -> None:
+        """Record an ingest-side dedup hit (upload_image skipping a chunk
+        the destination already holds) without racing other counters."""
+        with self._meta_lock:
+            self.dedup_hits += 1
+            self.dedup_bytes_skipped += nbytes
 
     # Stores that upload lazily override this to block until durable.
     def flush(self) -> None:
@@ -94,12 +133,16 @@ class InMemoryStore(ObjectStore):
 
     ``latency_s`` + len/``bandwidth_bps`` of wall-clock sleep per op lets the
     cluster simulator reproduce the paper's network-bound checkpoint/restart
-    curves (Fig 3b/3c) deterministically.
+    curves (Fig 3b/3c) deterministically. Latency is paid concurrently
+    (per-op sleep outside any lock — parallel requests overlap it, like
+    independent RTTs); bandwidth with ``shared_link=True`` is paid under a
+    link lock (parallel requests contend, like one NFS/Ceph ingress pipe).
     """
 
     def __init__(self, latency_s: float = 0.0,
                  bandwidth_bps: Optional[float] = None,
                  shared_link: bool = False):
+        super().__init__()
         self._data: Dict[str, bytes] = {}
         self._lock = threading.Lock()
         self._link_lock = threading.Lock()
@@ -157,10 +200,12 @@ class LocalFSStore(ObjectStore):
     """Directory-backed store. Keys map to files (``/`` allowed in keys).
 
     Writes are atomic (tmp + rename) so a crashed writer never leaves a
-    half-written object visible.
+    half-written object visible; concurrent writers use per-thread tmp
+    names, so parallel puts of different keys need no extra locking.
     """
 
     def __init__(self, root: str):
+        super().__init__()
         self.root = root
         os.makedirs(root, exist_ok=True)
 
@@ -209,20 +254,32 @@ class TwoTierStore(ObjectStore):
     """Local tier for writes, lazy background replication to remote tier.
 
     Reads prefer local, falling back to remote (so a restarted host that
-    lost its local tier still restores). ``flush()`` blocks until all
-    pending uploads are durable in the remote tier — the commit marker is
-    only written after flush (see writer.py), preserving atomicity.
+    lost its local tier still restores). Replication runs over
+    ``upload_streams`` concurrent uploader threads — on a latency- or
+    bandwidth-bound remote (the paper's S3/Ceph roles) the backlog drains
+    ~streams× faster, which directly shortens ``flush()``. ``flush()``
+    blocks on a condition variable until all pending uploads are durable
+    in the remote tier (no polling); the commit marker is only written
+    after flush (see writer.py), preserving atomicity.
     """
 
-    def __init__(self, local: ObjectStore, remote: ObjectStore):
+    def __init__(self, local: ObjectStore, remote: ObjectStore, *,
+                 upload_streams: int = 4):
+        super().__init__()
         self.local = local
         self.remote = remote
+        self.upload_streams = max(1, int(upload_streams))
         self._q: "queue.Queue[Optional[str]]" = queue.Queue()
         self._pending: Dict[str, int] = {}
-        self._lock = threading.Lock()
+        self._drained = threading.Condition()
         self._err: Optional[BaseException] = None
-        self._thread = threading.Thread(target=self._uploader, daemon=True)
-        self._thread.start()
+        self._failed: Set[str] = set()        # replications to retry
+        self._threads = [
+            threading.Thread(target=self._uploader, daemon=True,
+                             name=f"tt-upload-{i}")
+            for i in range(self.upload_streams)]
+        for t in self._threads:
+            t.start()
 
     def _uploader(self) -> None:
         while True:
@@ -231,17 +288,21 @@ class TwoTierStore(ObjectStore):
                 return
             try:
                 self.remote.put(key, self.local.get(key))
-            except BaseException as e:        # surfaced at flush()
-                self._err = e
-            finally:
-                with self._lock:
+            except BaseException as e:        # surfaced at flush(), which
+                with self._drained:           # re-queues the key: a failed
+                    self._err = e             # upload stays owed, or a later
+                    self._failed.add(key)     # save could commit while the
+            finally:                          # remote misses this chunk
+                with self._drained:
                     self._pending[key] -= 1
                     if self._pending[key] == 0:
                         del self._pending[key]
+                    if not self._pending:
+                        self._drained.notify_all()
 
     def put(self, key: str, data: bytes) -> None:
         self.local.put(key, data)
-        with self._lock:
+        with self._drained:
             self._pending[key] = self._pending.get(key, 0) + 1
         self._q.put(key)
 
@@ -263,14 +324,28 @@ class TwoTierStore(ObjectStore):
         self.remote.delete(key)
 
     def flush(self) -> None:
-        while True:
-            with self._lock:
-                if not self._pending:
-                    break
-            time.sleep(0.001)
-        if self._err is not None:
-            err, self._err = self._err, None
-            raise err
+        # Re-queue failed replications first: until every one of them lands
+        # remotely, no flush() may return cleanly — otherwise a later save
+        # could dedup against the local copy and commit a checkpoint whose
+        # chunk exists in no durable tier. Transient remote errors heal on
+        # a later flush; persistent ones keep every flush (and therefore
+        # every commit) failing.
+        with self._drained:
+            retry, self._failed = self._failed, set()
+            for key in retry:
+                self._pending[key] = self._pending.get(key, 0) + 1
+        for key in retry:
+            self._q.put(key)
+        with self._drained:
+            while self._pending:
+                self._drained.wait()
+            if self._err is not None:
+                err, self._err = self._err, None
+                raise err
+
+    def pending_uploads(self) -> int:
+        with self._drained:
+            return sum(self._pending.values())
 
     def drop_local(self) -> None:
         """Simulate losing the fast tier (host failure)."""
@@ -278,5 +353,7 @@ class TwoTierStore(ObjectStore):
             self.local.delete(k)
 
     def close(self) -> None:
-        self._q.put(None)
-        self._thread.join(timeout=5)
+        for _ in self._threads:
+            self._q.put(None)
+        for t in self._threads:
+            t.join(timeout=5)

@@ -21,6 +21,15 @@ time, Table 2 + Fig 6) from a different axis than the codecs: codecs shrink
 every chunk, dedup removes *unchanged* chunks entirely. ``AsyncCheckpointer``
 additionally keeps a per-leaf raw-content hash cache so unchanged chunks skip
 even the encode step, not just the upload.
+
+Parallel data plane (plane.py): chunks flow through a bounded encode pool
+into a concurrent upload stage — ``DataPlaneConfig`` sets the worker counts
+and the in-flight byte cap (backpressure). Dedup tables (``known``,
+``raw_cache``) are shared across workers under one lock, and single-flight
+claims per digest guarantee the same puts / counters / bytes as the serial
+plane regardless of scheduling; with ``workers=1`` the plane degenerates to
+exactly the serial loop. The commit protocol is untouched: every upload is
+joined before the manifest is put, so steps 2–4 above still gate visibility.
 """
 from __future__ import annotations
 
@@ -38,6 +47,8 @@ from repro.ckpt.layout import (COMMITTED, MANIFEST, ChunkInfo, LeafInfo,
                                Manifest, cas_key, chunk_digest, chunk_key,
                                leaf_items, local_shards, np_dtype,
                                step_prefix, structure_skeleton)
+from repro.ckpt.plane import (ByteBudget, DataPlaneConfig, SingleFlight,
+                              shared_executor)
 from repro.ckpt.storage import ObjectStore
 
 
@@ -83,77 +94,219 @@ def known_digests(store: ObjectStore, prefix: str,
 
 def save_checkpoint(store: ObjectStore, prefix: str, step: int, tree: Any, *,
                     codec: str = "raw", incremental: bool = True,
-                    metadata: Optional[Dict[str, Any]] = None) -> Manifest:
+                    metadata: Optional[Dict[str, Any]] = None,
+                    plane: Optional[DataPlaneConfig] = None) -> Manifest:
     """Blocking save. Returns the committed manifest.
 
     incremental=True (default) writes format-v2 content-addressed chunks and
     skips any chunk already present in the previous committed manifest;
     incremental=False writes the legacy step-private v1 layout.
+    plane configures the parallel data plane (None = DataPlaneConfig()).
     """
     staged = _stage(tree)
     skeleton = structure_skeleton(tree)
     return _write_staged(store, prefix, step, staged, skeleton, codec,
-                         metadata or {}, incremental=incremental)
+                         metadata or {}, incremental=incremental, plane=plane)
+
+
+class _SaveContext:
+    """Shared mutable state of one save: dedup tables, stats, backpressure.
+
+    One lock guards ``known``, ``raw_cache`` and ``stats``; the two
+    SingleFlight tables share it so a claim's existence check and the table
+    lookup it guards are one atomic step.
+    """
+
+    def __init__(self, store: ObjectStore, prefix: str, codec: str,
+                 incremental: bool, known: Optional[Dict[str, int]],
+                 raw_cache: Optional[Dict[str, Tuple[str, int]]],
+                 plane: DataPlaneConfig):
+        self.store = store
+        self.prefix = prefix
+        self.codec = codec
+        self.incremental = incremental
+        self.known = known
+        self.raw_cache = raw_cache
+        self.lock = threading.Lock()
+        self.raw_flight = SingleFlight(self.lock)
+        self.put_flight = SingleFlight(self.lock)
+        self.budget = ByteBudget(0 if plane.serial_save
+                                 else plane.max_inflight_bytes)
+        self.stats = {"chunks": 0, "dedup_hits": 0, "dedup_misses": 0,
+                      "bytes_written": 0, "bytes_deduped": 0}
+
+    def count_hit(self, nbytes: int) -> None:
+        with self.lock:
+            self.stats["dedup_hits"] += 1
+            self.stats["bytes_deduped"] += nbytes
+
+    def count_miss(self, nbytes: int) -> None:
+        with self.lock:
+            self.stats["dedup_misses"] += 1
+            self.stats["bytes_written"] += nbytes
+
+
+class _Encoded:
+    """Result of the encode stage for one chunk, handed to the upload stage.
+
+    ``chunk`` is set when the encode stage fully resolved the chunk (raw
+    cache hit — nothing to upload); otherwise ``data`` carries the encoded
+    bytes and ``raw_key`` the raw-digest claim to settle after the put.
+    """
+    __slots__ = ("chunk", "key", "digest", "data", "raw_key", "off", "shp")
+
+    def __init__(self, chunk=None, key=None, digest=None, data=None,
+                 raw_key=None, off=None, shp=None):
+        self.chunk = chunk
+        self.key = key
+        self.digest = digest
+        self.data = data
+        self.raw_key = raw_key
+        self.off = off
+        self.shp = shp
+
+
+def _encode_chunk(ctx: _SaveContext, step: int, name: str, off, shp,
+                  host: np.ndarray, dtype: str) -> _Encoded:
+    """Stage 1: serialize + codec + digest (CPU-bound, encode pool)."""
+    raw = np.ascontiguousarray(host).tobytes()
+    if not ctx.incremental:
+        key = chunk_key(ctx.prefix, step, name, off)
+        data = compression.encode(raw, host.dtype, ctx.codec)
+        return _Encoded(key=key, data=data, off=off, shp=shp)
+    rk: Optional[str] = None
+    if ctx.raw_cache is not None:
+        rk = _raw_digest(dtype, raw)
+        if not ctx.raw_flight.claim(rk, lambda: rk in ctx.raw_cache):
+            with ctx.lock:
+                digest, nbytes = ctx.raw_cache[rk]
+            ctx.count_hit(nbytes)                # skipped encode AND put
+            return _Encoded(chunk=ChunkInfo(off, shp,
+                                            cas_key(ctx.prefix, digest),
+                                            nbytes, digest))
+    try:
+        data = compression.encode(raw, host.dtype, ctx.codec)
+    except BaseException:
+        if rk is not None:
+            ctx.raw_flight.abort(rk)             # let a waiter retry
+        raise
+    return _Encoded(digest=chunk_digest(data), data=data, raw_key=rk,
+                    off=off, shp=shp)
+
+
+def _upload_chunk(ctx: _SaveContext, enc: _Encoded) -> ChunkInfo:
+    """Stage 2: dedup-aware store put (IO-bound, upload pool)."""
+    if not ctx.incremental:                      # legacy v1: plain put
+        ctx.store.put(enc.key, enc.data)
+        ctx.count_miss(len(enc.data))
+        return ChunkInfo(enc.off, enc.shp, enc.key, len(enc.data))
+    digest, nbytes = enc.digest, len(enc.data)
+    ok = False
+    try:
+        if ctx.put_flight.claim(digest, lambda: digest in ctx.known):
+            try:
+                wrote = ctx.store.put_if_absent(
+                    cas_key(ctx.prefix, digest), enc.data)
+            except BaseException:
+                ctx.put_flight.abort(digest)     # a waiter may retry the put
+                raise
+            with ctx.lock:
+                ctx.known[digest] = nbytes
+            (ctx.count_miss if wrote else ctx.count_hit)(nbytes)
+            ctx.put_flight.done(digest)
+        else:                                    # previous manifest, or a
+            ctx.count_hit(nbytes)                # concurrent worker, won
+        ok = True
+    finally:
+        if enc.raw_key is not None:
+            if ok:
+                with ctx.lock:
+                    ctx.raw_cache[enc.raw_key] = (digest, nbytes)
+            ctx.raw_flight.done(enc.raw_key)
+    return ChunkInfo(enc.off, enc.shp, cas_key(ctx.prefix, digest),
+                     nbytes, digest)
+
+
+def _run_pipeline(ctx: _SaveContext, plane: DataPlaneConfig, step: int,
+                  tasks: List[tuple]) -> None:
+    """Encode pool -> upload pool, bounded by ctx.budget; joins everything.
+
+    Each task is (slots, i, name, off, shp, host, dtype); the finished
+    ChunkInfo lands in ``slots[i]`` so the manifest is assembled in
+    deterministic (staging) order no matter which worker finishes when.
+    """
+    up = shared_executor("up", plane.upload_workers)
+    enc = shared_executor("enc", plane.encode_workers)
+
+    def upload_job(slots, i, enc_result, admitted):
+        try:
+            slots[i] = _upload_chunk(ctx, enc_result)
+        finally:
+            ctx.budget.release(admitted)
+
+    def encode_job(task, admitted):
+        slots, i, name, off, shp, host, dtype = task
+        try:
+            enc_result = _encode_chunk(ctx, step, name, off, shp,
+                                       host, dtype)
+            if enc_result.chunk is not None:         # resolved: no upload
+                slots[i] = enc_result.chunk
+                ctx.budget.release(admitted)
+                return None
+            return up.submit(upload_job, slots, i, enc_result, admitted)
+        except BaseException:
+            ctx.budget.release(admitted)
+            raise
+
+    encode_futs = []
+    for task in tasks:
+        admitted = task[5].nbytes
+        ctx.budget.acquire(admitted)                 # backpressure
+        encode_futs.append(enc.submit(encode_job, task, admitted))
+    upload_futs = [f.result() for f in encode_futs]
+    for f in upload_futs:
+        if f is not None:
+            f.result()                               # join: all puts durable
 
 
 def _write_staged(store: ObjectStore, prefix: str, step: int, staged,
                   skeleton, codec: str, metadata: Dict[str, Any], *,
                   incremental: bool = True,
                   known: Optional[Dict[str, int]] = None,
-                  raw_cache: Optional[Dict[str, Tuple[str, int]]] = None
-                  ) -> Manifest:
+                  raw_cache: Optional[Dict[str, Tuple[str, int]]] = None,
+                  plane: Optional[DataPlaneConfig] = None) -> Manifest:
     """Serialize + upload staged shards, then atomically commit.
 
     known:     digest -> nbytes of chunks guaranteed live in the store
                (primed from the previous committed manifest when None).
     raw_cache: raw-content digest -> (encoded digest, nbytes); lets repeat
                content skip the codec entirely (AsyncCheckpointer only).
+    plane:     parallel data-plane knobs (None = DataPlaneConfig()).
     """
-    stats = {"chunks": 0, "dedup_hits": 0, "dedup_misses": 0,
-             "bytes_written": 0, "bytes_deduped": 0}
+    plane = plane or DataPlaneConfig()
     if incremental and known is None:
         known = known_digests(store, prefix, before_step=step)
+    ctx = _SaveContext(store, prefix, codec, incremental, known, raw_cache,
+                       plane)
     leaves: Dict[str, LeafInfo] = {}
+    tasks: List[tuple] = []
     for name, kind, shape, dtype, shards in staged:
-        chunks = []
-        for off, shp, host in shards:
-            stats["chunks"] += 1
-            raw = np.ascontiguousarray(host).tobytes()
-            if not incremental:
-                key = chunk_key(prefix, step, name, off)
-                data = compression.encode(raw, host.dtype, codec)
-                store.put(key, data)
-                stats["dedup_misses"] += 1
-                stats["bytes_written"] += len(data)
-                chunks.append(ChunkInfo(off, shp, key, len(data)))
-                continue
-            rk = _raw_digest(dtype, raw)
-            if raw_cache is not None and rk in raw_cache:
-                digest, nbytes = raw_cache[rk]      # skip encode AND put
-                stats["dedup_hits"] += 1
-                stats["bytes_deduped"] += nbytes
-            else:
-                data = compression.encode(raw, host.dtype, codec)
-                digest, nbytes = chunk_digest(data), len(data)
-                if digest in known:                  # skip put (prev manifest)
-                    stats["dedup_hits"] += 1
-                    stats["bytes_deduped"] += nbytes
-                elif store.put_if_absent(cas_key(prefix, digest), data):
-                    stats["dedup_misses"] += 1
-                    stats["bytes_written"] += nbytes
-                else:                                # store already had it
-                    stats["dedup_hits"] += 1
-                    stats["bytes_deduped"] += nbytes
-                known[digest] = nbytes
-                if raw_cache is not None:
-                    raw_cache[rk] = (digest, nbytes)
-            chunks.append(ChunkInfo(off, shp, cas_key(prefix, digest),
-                                    nbytes, digest))
-        leaves[name] = LeafInfo(name, shape, dtype, kind, chunks)
+        slots: List[Optional[ChunkInfo]] = [None] * len(shards)
+        leaves[name] = LeafInfo(name, shape, dtype, kind, slots)
+        for i, (off, shp, host) in enumerate(shards):
+            ctx.stats["chunks"] += 1
+            tasks.append((slots, i, name, off, shp, host, dtype))
+    if plane.serial_save:
+        for slots, i, name, off, shp, host, dtype in tasks:
+            enc = _encode_chunk(ctx, step, name, off, shp, host, dtype)
+            slots[i] = enc.chunk if enc.chunk is not None \
+                else _upload_chunk(ctx, enc)
+    else:
+        _run_pipeline(ctx, plane, step, tasks)
     manifest = Manifest(step=step, codec=codec, leaves=leaves,
                         skeleton=skeleton,
                         metadata={**metadata, "time": time.time(),
-                                  "dedup": stats},
+                                  "dedup": ctx.stats},
                         version=2 if incremental else 1)
     sp = step_prefix(prefix, step)
     store.put(f"{sp}/{MANIFEST}", manifest.to_json().encode())
@@ -167,8 +320,9 @@ class AsyncCheckpointer:
     """Double-buffered async checkpointing.
 
     ``save()`` blocks only for the device->host copy; serialization, codec
-    and store puts run on a background thread. At most one snapshot is in
-    flight — a second ``save()`` first waits for the previous one (double
+    and store puts run on a background thread (which in turn drives the
+    parallel data plane — see ``DataPlaneConfig``). At most one snapshot is
+    in flight — a second ``save()`` first waits for the previous one (double
     buffering), bounding host memory at 2x model state.
 
     Incremental mode maintains two dedup caches across saves:
@@ -176,17 +330,20 @@ class AsyncCheckpointer:
       * ``_raw_cache`` — raw digest -> (encoded digest, nbytes) (skips the
         codec too — the common case for frozen embeddings / untouched
         optimizer slots).
-    Both are pruned after every commit to exactly the chunks of the manifest
+    Both are shared across the plane's workers (guarded by the save's lock)
+    and pruned after every commit to exactly the chunks of the manifest
     just written: those are the only chunks mark-and-sweep GC (ckpt/gc.py)
     is guaranteed to retain, so a cache hit can never reference a swept key.
     """
 
     def __init__(self, store: ObjectStore, prefix: str, *,
-                 codec: str = "raw", incremental: bool = True):
+                 codec: str = "raw", incremental: bool = True,
+                 plane: Optional[DataPlaneConfig] = None):
         self.store = store
         self.prefix = prefix
         self.codec = codec
         self.incremental = incremental
+        self.plane = plane or DataPlaneConfig()
         self._pool = cf.ThreadPoolExecutor(max_workers=1,
                                            thread_name_prefix="ckpt")
         self._inflight: Optional[cf.Future] = None
@@ -218,7 +375,8 @@ class AsyncCheckpointer:
             man = _write_staged(self.store, self.prefix, step, staged,
                                 skeleton, self.codec, metadata or {},
                                 incremental=self.incremental,
-                                known=self._known, raw_cache=self._raw_cache)
+                                known=self._known, raw_cache=self._raw_cache,
+                                plane=self.plane)
             self._absorb(man)
             with self._lock:
                 self.last_committed = step

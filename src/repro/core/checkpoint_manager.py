@@ -14,6 +14,7 @@ import time
 from typing import Any, Dict, List, Optional
 
 from repro.ckpt import gc as ckpt_gc
+from repro.ckpt.plane import DataPlaneConfig, shared_executor
 from repro.ckpt.reader import (latest_step, list_steps, load_manifest,
                                restore)
 from repro.ckpt.storage import ObjectStore
@@ -22,10 +23,17 @@ from repro.core.coordinator import CheckpointPolicy, Coordinator
 
 
 class CheckpointManager:
-    def __init__(self, stores: Dict[str, ObjectStore]):
+    def __init__(self, stores: Dict[str, ObjectStore],
+                 plane: Optional[DataPlaneConfig] = None):
         self._stores = dict(stores)
         self._async: Dict[str, AsyncCheckpointer] = {}
         self._lock = threading.Lock()
+        # service-wide default for the parallel checkpoint data plane;
+        # CheckpointPolicy.plane overrides per application
+        self.plane = plane or DataPlaneConfig()
+
+    def _plane_for(self, coord: Coordinator) -> DataPlaneConfig:
+        return getattr(coord.asr.policy, "plane", None) or self.plane
 
     def store(self, name: str = "default") -> ObjectStore:
         if name not in self._stores:
@@ -46,17 +54,35 @@ class CheckpointManager:
 
         def run_gc(_step=None):
             if pol.keep_last:
+                # Invalidate writer-side dedup caches for whatever the sweep
+                # reaps. The async writer's own commits already prune its
+                # caches (writer._absorb), but interleaved *blocking* saves
+                # can age the async writer's last manifest out of the keep
+                # window — at which point its cached digests point at
+                # sweepable chunks.
+                with self._lock:
+                    ck = self._async.get(coord.coord_id)
                 ckpt_gc.collect(store, coord.ckpt_prefix,
                                 keep_last=pol.keep_last,
-                                keep_every=pol.keep_every)
-                # Writer-side dedup caches are pruned to the latest manifest
-                # after each commit (writer._absorb), so nothing referencing
-                # a swept chunk can survive in them; no invalidation needed.
+                                keep_every=pol.keep_every,
+                                on_swept=(None if ck is None
+                                          else ck.invalidate))
 
         if blocking:
-            save_checkpoint(store, coord.ckpt_prefix, step, state,
-                            codec=pol.codec, metadata=meta)
-            run_gc()
+            def _save_and_gc():
+                save_checkpoint(store, coord.ckpt_prefix, step, state,
+                                codec=pol.codec, metadata=meta,
+                                plane=self._plane_for(coord))
+                run_gc()
+            # Run the blocking save + GC on the coordinator's writer
+            # thread (creating it if needed — checking for an existing one
+            # would be TOCTOU against a concurrent async save creating
+            # it), after any in-flight async save. Otherwise this GC's
+            # sweep_orphans could reap chunks an in-flight save has put
+            # but not yet committed — committing a manifest that
+            # references reaped keys (the invariant delete_image already
+            # serializes the same way).
+            self._checkpointer(coord).run_serialized(_save_and_gc)
         else:
             # GC must run post-commit, or it would count the in-flight step
             ck = self._checkpointer(coord)
@@ -67,7 +93,8 @@ class CheckpointManager:
             if coord.coord_id not in self._async:
                 pol = coord.asr.policy
                 self._async[coord.coord_id] = AsyncCheckpointer(
-                    self.store(pol.store), coord.ckpt_prefix, codec=pol.codec)
+                    self.store(pol.store), coord.ckpt_prefix, codec=pol.codec,
+                    plane=self._plane_for(coord))
             return self._async[coord.coord_id]
 
     def wait(self, coord: Coordinator) -> None:
@@ -111,7 +138,8 @@ class CheckpointManager:
              shardings: Any = None, target: Any = None) -> Any:
         tree, _ = restore(self.store(coord.asr.policy.store),
                           coord.ckpt_prefix, step,
-                          target=target, shardings=shardings)
+                          target=target, shardings=shardings,
+                          plane=self._plane_for(coord))
         return tree
 
     # ---- upload (migration ingest; paper §5.3 "upload a checkpoint") ----
@@ -123,24 +151,36 @@ class CheckpointManager:
         chunks live outside the step directory), rewritten onto this app's
         prefix, and deduped on ingest: chunks the destination already holds
         (e.g. from an earlier clone of the same lineage) are not re-uploaded.
+
+        The per-chunk copies are independent, so they run on the parallel
+        data plane's upload streams — cross-cloud transfer (the dominant
+        term of migration, paper Table 3) overlaps source gets with
+        destination puts. The commit protocol is the writer's: every chunk
+        durable, then manifest, flush, COMMITTED.
         """
         from repro.ckpt.layout import MANIFEST, step_prefix
         from repro.ckpt.reader import load_manifest as _load
         dst = self.store(coord.asr.policy.store)
         man = _load(src_store, src_prefix, step)
         dst_sp = step_prefix(coord.ckpt_prefix, step)
-        seen = set()
-        for li in man.leaves.values():
-            for c in li.chunks:
-                if c.key in seen:
-                    continue
-                seen.add(c.key)
-                new_key = coord.ckpt_prefix + c.key[len(src_prefix):]
-                if dst.exists(new_key):      # ingest dedup: count, skip the
-                    dst.dedup_hits += 1      # source read entirely
-                    dst.dedup_bytes_skipped += c.nbytes
-                    continue
-                dst.put_if_absent(new_key, src_store.get(c.key))
+
+        def copy_chunk(c) -> None:
+            new_key = coord.ckpt_prefix + c.key[len(src_prefix):]
+            if dst.exists(new_key):          # ingest dedup: count, skip the
+                dst.count_ingest_hit(c.nbytes)  # source read entirely
+                return
+            dst.put_if_absent(new_key, src_store.get(c.key))
+
+        unique = {c.key: c for li in man.leaves.values()
+                  for c in li.chunks}
+        workers = max(1, self._plane_for(coord).upload_workers)
+        if workers == 1 or len(unique) <= 1:
+            for c in unique.values():
+                copy_chunk(c)
+        else:
+            ex = shared_executor("up", workers)
+            for fut in [ex.submit(copy_chunk, c) for c in unique.values()]:
+                fut.result()                 # join: all chunks durable
         manifest_json = man.to_json().replace(src_prefix, coord.ckpt_prefix)
         dst.put(f"{dst_sp}/{MANIFEST}", manifest_json.encode())
         dst.flush()

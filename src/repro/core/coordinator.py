@@ -13,6 +13,7 @@ import threading
 import time
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.ckpt.plane import DataPlaneConfig
 from repro.ckpt.storage import ObjectStore
 from repro.clusters.base import VMHandle, VMTemplate
 from repro.clusters.simulator import fresh_id
@@ -57,6 +58,9 @@ class CheckpointPolicy:
     keep_last: int = 3
     keep_every: int = 0
     store: str = "default"           # named storage backend
+    # per-app override of the checkpoint data-plane parallelism (worker
+    # counts, in-flight byte cap); None = the CheckpointManager's default
+    plane: Optional[DataPlaneConfig] = None
 
 
 @dataclasses.dataclass

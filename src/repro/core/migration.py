@@ -21,7 +21,11 @@ Image transfer goes through CheckpointManager.upload_image, which resolves
 chunks via the source manifest and dedups on ingest (content-addressed
 chunks the destination already holds are not re-uploaded) — repeated
 migrations of a slowly-changing job cost only the delta, the same economics
-docs/architecture.md describes for the write path.
+docs/architecture.md describes for the write path. The transfer itself runs
+on the destination service's parallel data plane (DataPlaneConfig
+upload_workers concurrent chunk copies), so the ``transfer_s`` term of
+MigrationResult — the dominant cost of cross-cloud migration in the paper's
+Table 3 — scales with stream count on latency/bandwidth-bound links.
 """
 from __future__ import annotations
 

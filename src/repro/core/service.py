@@ -30,6 +30,7 @@ from __future__ import annotations
 import time
 from typing import Any, Dict, List, Optional
 
+from repro.ckpt.plane import DataPlaneConfig
 from repro.ckpt.storage import InMemoryStore, ObjectStore
 from repro.clusters.base import ClusterBackend
 from repro.core.app_manager import AppManager
@@ -45,12 +46,16 @@ class CACSService:
                  stores: Optional[Dict[str, ObjectStore]] = None,
                  db_store: Optional[ObjectStore] = None,
                  start_daemons: bool = True,
-                 workers: int = 100):
+                 workers: int = 100,
+                 ckpt_plane: Optional[DataPlaneConfig] = None):
         stores = stores or {"default": InMemoryStore()}
         self.db = CoordinatorDB(db_store)
         self.cloud = CloudManager(backends)
         self.provision = ProvisionManager()
-        self.ckpt = CheckpointManager(stores)
+        # service-wide checkpoint data-plane parallelism (swap-out, periodic
+        # saves, restores and image ingest all ride it); per-app override
+        # via CheckpointPolicy.plane
+        self.ckpt = CheckpointManager(stores, plane=ckpt_plane)
         self.apps = AppManager(self.db, self.cloud, self.provision,
                                self.ckpt, workers=workers)
         # route native failure notifications (Snooze path, §6.1)
