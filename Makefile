@@ -2,18 +2,22 @@
 #
 #   make test         tier-1 test suite (the command ROADMAP.md pins)
 #   make bench-smoke  fast benchmark subset proving the measurement paths
+#   make chaos-smoke  seeded fault-recovery scenario sweep (MTTR per class)
 #   make docs-lint    sanity-check docs: files exist, internal refs resolve
 
 PY      ?= python
 PYPATH  := src
 
-.PHONY: test bench-smoke docs-lint
+.PHONY: test bench-smoke chaos-smoke docs-lint
 
 test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
 
 bench-smoke:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only table2,table2incr,ckpt_path,pplane
+
+chaos-smoke:
+	CHAOS_TRIALS=1 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only fault_recovery
 
 docs-lint:
 	$(PY) scripts/docs_lint.py

@@ -20,7 +20,7 @@ import time
 import traceback
 
 ALL = ("fig3", "table2", "table2incr", "fig4", "fig5", "fig6",
-       "ckpt_path", "pplane")
+       "ckpt_path", "pplane", "fault_recovery")
 
 
 def main() -> None:
@@ -32,9 +32,10 @@ def main() -> None:
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else set(ALL)
 
-    from benchmarks import (ckpt_path, fig3_scalability, fig4_service_load,
-                            fig5_migration, fig6_backends, parallel_plane,
-                            table2_image_size, table2_incremental)
+    from benchmarks import (ckpt_path, fault_recovery, fig3_scalability,
+                            fig4_service_load, fig5_migration, fig6_backends,
+                            parallel_plane, table2_image_size,
+                            table2_incremental)
     from benchmarks.common import CSV_ROWS
 
     modules = {
@@ -46,6 +47,7 @@ def main() -> None:
         "fig6": fig6_backends,
         "ckpt_path": ckpt_path,
         "pplane": parallel_plane,
+        "fault_recovery": fault_recovery,
     }
     print("bench,param,metric,value")
     failures = 0

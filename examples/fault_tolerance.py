@@ -1,9 +1,20 @@
-"""Fault tolerance: a host dies mid-training; CACS detects it (native
-notification on the Snooze-like backend), allocates a replacement VM,
-restores the latest image and resumes — bit-exact with the failure-free run.
+"""Fault tolerance, two acts.
 
-    PYTHONPATH=src python examples/fault_tolerance.py
+Act 1 — bit-exact single failure (the paper's §6.3 case 1): a host dies
+mid-training; CACS detects it (native notification on the Snooze-like
+backend), allocates a replacement VM, restores the latest image and
+resumes — bit-exact with the failure-free run.
+
+Act 2 — seeded chaos storyline: a deterministic multi-fault schedule
+(VM crash, mid-save storage fault, raising health hook, monitor
+partition, restore-time get fault, straggler) drives the whole recovery
+control plane through `repro.core.chaos`. Same seed → same event trace;
+every fault ends back in RUNNING off the latest COMMITTED image.
+
+    PYTHONPATH=src python examples/fault_tolerance.py [--skip-reference]
+                                                      [--seed N]
 """
+import argparse
 import dataclasses
 import time
 
@@ -11,6 +22,7 @@ from repro.ckpt import InMemoryStore
 from repro.clusters import SnoozeBackend
 from repro.configs import get_config, reduced
 from repro.core import ASR, CACSService, CheckpointPolicy, CoordState
+from repro.core.chaos import FaultSchedule, run_scenario
 from repro.train import TrainerApp
 
 CFG = dataclasses.replace(reduced(get_config("internlm2-1.8b")),
@@ -27,7 +39,7 @@ def run_reference() -> float:
     return app.losses[-1]
 
 
-def main() -> None:
+def act1_bit_exact_recovery() -> None:
     print("[ft] training failure-free reference ...")
     ref_loss = run_reference()
     print(f"[ft] reference final loss: {ref_loss:.6f}")
@@ -62,6 +74,37 @@ def main() -> None:
     assert abs(coord.app.last_loss - ref_loss) < 1e-6, "trajectory diverged!"
     print("[ft] OK: post-failure trajectory identical to failure-free run")
     svc.shutdown()
+
+
+def act2_chaos_storyline(seed: int) -> None:
+    sched = FaultSchedule.storyline(seed=seed)
+    print(f"[chaos] storyline (seed={seed}): {', '.join(sched.describe())}")
+    res = run_scenario(sched, period_s=0.3, settle_timeout_s=60)
+    for o in res.outcomes:
+        times = ("" if o.mttr_s is None else
+                 f"  detect={o.detection_s:.3f}s restore={o.restore_s:.3f}s "
+                 f"mttr={o.mttr_s:.3f}s (wall)")
+        print(f"[chaos]   {o.event.kind.value:<18} -> "
+              f"{'OK ' if o.ok else 'FAIL'} [{o.final_state}] "
+              f"{o.detail}{times}")
+    print(f"[chaos] final={res.final_state} recoveries={res.recoveries} "
+          f"duplicate-events-dropped={res.events_deduped} "
+          f"partition-fallbacks={res.partition_fallbacks}")
+    assert res.all_ok, "a fault did not recover cleanly"
+    replay = run_scenario(sched, period_s=0.3, settle_timeout_s=60)
+    assert replay.trace == res.trace, "storyline did not replay identically"
+    print("[chaos] OK: every fault recovered; replay trace identical")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--skip-reference", action="store_true",
+                    help="skip the (slow) bit-exact trainer act")
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+    if not args.skip_reference:
+        act1_bit_exact_recovery()
+    act2_chaos_storyline(args.seed)
 
 
 if __name__ == "__main__":

@@ -1,12 +1,13 @@
 from repro.ckpt.plane import DataPlaneConfig
 from repro.ckpt.reader import latest_step, list_steps, load_manifest, restore
-from repro.ckpt.storage import (InMemoryStore, LocalFSStore, ObjectStore,
-                                TwoTierStore)
+from repro.ckpt.storage import (ChaosStorageError, FaultyStore, InMemoryStore,
+                                LocalFSStore, ObjectStore, TwoTierStore)
 from repro.ckpt.writer import AsyncCheckpointer, save_checkpoint
 from repro.ckpt import gc
 
 __all__ = [
     "latest_step", "list_steps", "load_manifest", "restore",
+    "ChaosStorageError", "FaultyStore",
     "InMemoryStore", "LocalFSStore", "ObjectStore", "TwoTierStore",
     "AsyncCheckpointer", "save_checkpoint", "gc", "DataPlaneConfig",
 ]

@@ -250,6 +250,80 @@ class LocalFSStore(ObjectStore):
             pass
 
 
+class ChaosStorageError(IOError):
+    """Raised by FaultyStore for a deterministically injected op failure."""
+
+
+class FaultyStore(ObjectStore):
+    """Fault-injecting wrapper around any ObjectStore (chaos harness).
+
+    ``arm_put_errors(n)`` / ``arm_get_errors(n)`` make the next *n* put/get
+    calls raise :class:`ChaosStorageError` — deterministic (a counter, not a
+    probability), so a seeded chaos scenario replays exactly. Because the
+    writer's commit protocol puts data chunks before MANIFEST before
+    COMMITTED, a put fault injected mid-save must leave the previous
+    COMMITTED image fully loadable and the torn step invisible; the chaos
+    suite (`tests/test_chaos.py`) holds the store to exactly that.
+
+    The wrapper *is* the store as far as the service is concerned: the
+    inherited ``put_if_absent``/``delete_unreferenced`` run against the
+    wrapper's counters, and every other op delegates to ``inner``.
+    """
+
+    def __init__(self, inner: ObjectStore):
+        super().__init__()
+        self.inner = inner
+        self._fault_lock = threading.Lock()
+        self._put_faults = 0
+        self._get_faults = 0
+        self.faults_injected = 0
+
+    def arm_put_errors(self, n: int) -> None:
+        with self._fault_lock:
+            self._put_faults = max(0, int(n))
+
+    def arm_get_errors(self, n: int) -> None:
+        with self._fault_lock:
+            self._get_faults = max(0, int(n))
+
+    def disarm(self) -> None:
+        with self._fault_lock:
+            self._put_faults = 0
+            self._get_faults = 0
+
+    def armed(self) -> int:
+        with self._fault_lock:
+            return self._put_faults + self._get_faults
+
+    def _maybe_fault(self, op: str, key: str) -> None:
+        attr = f"_{op}_faults"
+        with self._fault_lock:
+            if getattr(self, attr) > 0:
+                setattr(self, attr, getattr(self, attr) - 1)
+                self.faults_injected += 1
+                raise ChaosStorageError(f"injected {op} fault on {key!r}")
+
+    def put(self, key: str, data: bytes) -> None:
+        self._maybe_fault("put", key)
+        self.inner.put(key, data)
+
+    def get(self, key: str) -> bytes:
+        self._maybe_fault("get", key)
+        return self.inner.get(key)
+
+    def exists(self, key: str) -> bool:
+        return self.inner.exists(key)
+
+    def list(self, prefix: str) -> List[str]:
+        return self.inner.list(prefix)
+
+    def delete(self, key: str) -> None:
+        self.inner.delete(key)
+
+    def flush(self) -> None:
+        self.inner.flush()
+
+
 class TwoTierStore(ObjectStore):
     """Local tier for writes, lazy background replication to remote tier.
 

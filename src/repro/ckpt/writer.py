@@ -358,11 +358,16 @@ class AsyncCheckpointer:
         self.dedup_misses = 0
         self.bytes_written = 0
         self.bytes_deduped = 0
+        self.last_error: Optional[BaseException] = None
+        self.failed_saves = 0
 
     def save(self, step: int, tree: Any,
              metadata: Optional[Dict[str, Any]] = None,
              on_commit=None) -> None:
-        self.wait()
+        # A previous save's failure (e.g. a transient storage fault) must
+        # not poison this independent save: record it and move on. The
+        # failed step has no COMMITTED marker, so it is simply invisible.
+        self.wait(raise_error=False)
         t0 = time.monotonic()
         staged = _stage(tree)                      # sync: consistent snapshot
         skeleton = structure_skeleton(tree)
@@ -435,11 +440,28 @@ class AsyncCheckpointer:
                     "bytes_written": self.bytes_written,
                     "bytes_deduped": self.bytes_deduped}
 
-    def wait(self) -> None:
+    def wait(self, raise_error: bool = True) -> None:
+        """Block until the in-flight save (if any) finishes.
+
+        A failed save is consumed exactly once: its exception is recorded
+        in ``last_error``/``failed_saves`` and the in-flight slot cleared,
+        so one transient fault does not re-raise forever. With
+        ``raise_error=False`` the failure is recorded but swallowed (the
+        recovery path wants the newest COMMITTED image, not the error)."""
         with self._lock:
             fut = self._inflight
-        if fut is not None:
+        if fut is None:
+            return
+        try:
             fut.result()
+        except BaseException as e:                 # noqa: BLE001
+            with self._lock:
+                self.last_error = e
+                self.failed_saves += 1
+                if self._inflight is fut:
+                    self._inflight = None
+            if raise_error:
+                raise
 
     def close(self) -> None:
         self.wait()

@@ -39,7 +39,8 @@ class VMHandle:
     @property
     def reachable(self) -> bool:
         return (self.state == VMState.RUNNING
-                and self.host.state == HostState.ALLOCATED)
+                and self.host.state == HostState.ALLOCATED
+                and not self.host.partitioned)
 
 
 class ClusterBackend:

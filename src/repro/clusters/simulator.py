@@ -38,6 +38,10 @@ class VirtualHost:
     owner: Optional[str] = None        # coordinator id
     # health-degradation knob for straggler tests: multiplier on step time
     slowdown: float = 1.0
+    # network-partition knob: the host is alive and ALLOCATED but cannot be
+    # reached by the monitoring tree (distinct from a crash — the IaaS does
+    # NOT report partitions, so native notifications never fire for them)
+    partitioned: bool = False
 
 
 @dataclasses.dataclass(frozen=True)
@@ -62,6 +66,7 @@ class ClusterSim:
         self._hosts: Dict[str, VirtualHost] = {}
         self._lock = threading.RLock()
         self._failure_listeners: List[Callable[[VirtualHost], None]] = []
+        self._fault_listeners: List[Callable[[str, str, float], None]] = []
         for i in range(n_hosts):
             hid = f"{name}-host-{i:04d}"
             self._hosts[hid] = VirtualHost(host_id=hid)
@@ -105,6 +110,7 @@ class ClusterSim:
                     h.state = HostState.IDLE
                 h.owner = None
                 h.slowdown = 1.0
+                h.partitioned = False
 
     # ---- failures ------------------------------------------------------
     def fail_host(self, host_id: str) -> None:
@@ -112,6 +118,7 @@ class ClusterSim:
             h = self._hosts[host_id]
             h.state = HostState.FAILED
             listeners = list(self._failure_listeners)
+        self._notify_fault("fail", host_id, 0.0)
         for cb in listeners:
             cb(h)
 
@@ -120,17 +127,46 @@ class ClusterSim:
             h = self._hosts[host_id]
             h.state = HostState.IDLE
             h.owner = None
+        self._notify_fault("recover", host_id, 0.0)
 
     def degrade_host(self, host_id: str, slowdown: float) -> None:
         with self._lock:
             self._hosts[host_id].slowdown = slowdown
+        self._notify_fault("degrade", host_id, slowdown)
+
+    def partition_host(self, host_id: str) -> None:
+        """Cut the host off the monitoring network without killing it.
+
+        Unlike ``fail_host`` this fires no failure notification: the IaaS
+        does not see partitions, so only the broadcast tree (or a native
+        backend's unreachable-poll fallback) can detect it."""
+        with self._lock:
+            self._hosts[host_id].partitioned = True
+        self._notify_fault("partition", host_id, 1.0)
+
+    def heal_partition(self, host_id: str) -> None:
+        with self._lock:
+            self._hosts[host_id].partitioned = False
+        self._notify_fault("partition", host_id, 0.0)
 
     def on_failure(self, cb: Callable[[VirtualHost], None]) -> None:
         self._failure_listeners.append(cb)
 
+    def on_fault(self, cb: Callable[[str, str, float], None]) -> None:
+        """Subscribe to every injected fault: cb(kind, host_id, value).
+
+        The chaos harness (core/chaos.py) uses this to build its replayable
+        event trace; anything else (metrics, logging) can tap it too."""
+        self._fault_listeners.append(cb)
+
+    def _notify_fault(self, kind: str, host_id: str, value: float) -> None:
+        for cb in list(self._fault_listeners):
+            cb(kind, host_id, value)
+
     def is_reachable(self, host_id: str) -> bool:
         with self._lock:
-            return self._hosts[host_id].state == HostState.ALLOCATED
+            h = self._hosts[host_id]
+            return h.state == HostState.ALLOCATED and not h.partitioned
 
 
 class CapacityError(RuntimeError):

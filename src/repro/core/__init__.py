@@ -7,6 +7,9 @@ Public surface:
   * ``migration``         — clone / migrate / cloudify (paper §5.3, §7.3)
 """
 from repro.core.application import Application, AppContext, SimulatedApp
+from repro.core.chaos import (ChaosController, ChaosHealthHook, FaultEvent,
+                              FaultKind, FaultOutcome, FaultSchedule,
+                              ScenarioResult, run_scenario)
 from repro.core.coordinator import (ASR, CheckpointPolicy, Coordinator,
                                     CoordinatorDB, CoordState,
                                     InvalidTransition)
@@ -18,6 +21,8 @@ __all__ = [
     "Application", "AppContext", "SimulatedApp",
     "ASR", "CheckpointPolicy", "Coordinator", "CoordinatorDB", "CoordState",
     "InvalidTransition",
+    "ChaosController", "ChaosHealthHook", "FaultEvent", "FaultKind",
+    "FaultOutcome", "FaultSchedule", "ScenarioResult", "run_scenario",
     "clone", "cloudify", "migrate", "MigrationResult",
     "PriorityScheduler", "CACSService",
 ]

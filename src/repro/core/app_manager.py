@@ -19,11 +19,12 @@ import traceback
 from typing import Any, Dict, Optional
 
 from repro.clusters.base import SimBackend
+from repro.clusters.simulator import CapacityError
 from repro.core.application import AppContext
 from repro.core.checkpoint_manager import CheckpointManager
 from repro.core.cloud_manager import CloudManager
 from repro.core.coordinator import (ASR, Coordinator, CoordinatorDB,
-                                    CoordState)
+                                    CoordState, InvalidTransition)
 from repro.core.monitoring import MonitoringManager
 from repro.core.provision import ProvisionManager
 
@@ -31,7 +32,8 @@ from repro.core.provision import ProvisionManager
 class AppManager:
     def __init__(self, db: CoordinatorDB, cloud: CloudManager,
                  provision: ProvisionManager, ckpt: CheckpointManager,
-                 workers: int = 100):
+                 workers: int = 100, recover_retries: int = 2,
+                 retry_backoff_s: float = 0.02):
         self.db = db
         self.cloud = cloud
         self.provision = provision
@@ -45,6 +47,17 @@ class AppManager:
         self._ckpt_daemon: Optional[threading.Thread] = None
         self._next_ckpt: Dict[str, float] = {}
         self._step_counter: Dict[str, int] = {}
+        # At most one recovery/suspend action in flight per coordinator:
+        # the monitor re-reports a fault every poll tick (~50 ms) for as
+        # long as it persists, and duplicate submissions used to race into
+        # RuntimeError tracebacks inside _guarded.
+        self._inflight_ops: Dict[str, cf.Future] = {}
+        self._inflight_lock = threading.Lock()
+        self.events_deduped = 0
+        # transient-fault tolerance on the restore path (chaos: a storage
+        # get error mid-recovery should cost a retry, not an ERROR state)
+        self.recover_retries = recover_retries
+        self.retry_backoff_s = retry_backoff_s
 
     # ------------------------------------------------------------------
     # Submission (paper §5.1)
@@ -84,13 +97,19 @@ class AppManager:
             except Exception:
                 pass
 
-    def _start_app(self, coord: Coordinator, restore_state: Any) -> None:
+    def _start_app(self, coord: Coordinator, restore_state: Any) -> bool:
         asr = coord.asr
         if coord.app is None:
             coord.app = asr.app_factory()
         ctx = AppContext(coord.coord_id, coord.vms, service=None)
         coord.app.start(ctx, restore_state)
-        self.db.transition(coord, CoordState.RUNNING)
+        try:
+            self.db.transition(coord, CoordState.RUNNING)
+        except InvalidTransition:
+            # terminate() raced the bring-up/recovery: stop quietly and let
+            # the terminating thread (which joins us) release the resources
+            coord.app.stop()
+            return False
         backend = self.cloud.backend(asr.backend)
         native = backend.supports_failure_notifications
         hook = asr.health_hook or (lambda: coord.app.healthy())
@@ -98,6 +117,7 @@ class AppManager:
         if asr.policy.period_s > 0:
             self._next_ckpt[coord.coord_id] = (
                 time.monotonic() + asr.policy.period_s)
+        return True
 
     # ------------------------------------------------------------------
     # Checkpointing (paper §5.2: user-initiated / periodic / app-initiated)
@@ -109,8 +129,10 @@ class AppManager:
                 raise RuntimeError(
                     f"cannot checkpoint in state {coord.state.value}")
             state = coord.app.checkpoint_state()
-        step = self._step_counter.get(coord_id, 0) + 1
-        self._step_counter[coord_id] = step
+            # claim the step under the lock: a concurrent suspend (or a
+            # second checkpoint_now) must not mint the same step number
+            step = self._step_counter.get(coord_id, 0) + 1
+            self._step_counter[coord_id] = step
         self.ckpt.save(coord, step, state, blocking=blocking)
         return step
 
@@ -144,7 +166,10 @@ class AppManager:
                     continue
                 try:
                     self.checkpoint_now(coord_id, blocking=False)
-                except RuntimeError:
+                except Exception:                  # noqa: BLE001
+                    # state raced (RuntimeError) or the store faulted
+                    # (IOError): one app's bad save must not kill the
+                    # periodic daemon for every app — skip this period
                     pass
                 self._next_ckpt[coord_id] = (
                     now + coord.asr.policy.period_s)
@@ -160,16 +185,67 @@ class AppManager:
         if kind == "straggler":
             action = getattr(coord.asr, "straggler_action", "suspend")
             if action == "suspend":
-                self.pool.submit(self._guarded, self.suspend, coord_id,
-                                 "straggler")
+                self._submit_once(coord_id, self._suspend_if_running,
+                                  coord_id, "straggler")
             return
-        self.pool.submit(self._guarded, self._recover, coord_id, kind)
+        self._submit_once(coord_id, self._recover, coord_id, kind)
+
+    def _submit_once(self, coord_id: str, fn, *args) -> Optional[cf.Future]:
+        """Submit a recovery action unless one is already in flight for
+        this coordinator. The monitor re-fires every poll tick while a
+        fault persists (a straggler keeps straggling for the whole of the
+        suspend's swap-out write) — duplicates are dropped, not raced."""
+        with self._inflight_lock:
+            if coord_id in self._inflight_ops:
+                self.events_deduped += 1
+                return None
+            fut = self.pool.submit(self._guarded, fn, *args)
+            self._inflight_ops[coord_id] = fut
+        fut.add_done_callback(lambda _f: self._clear_inflight(coord_id))
+        return fut
+
+    def _clear_inflight(self, coord_id: str) -> None:
+        with self._inflight_lock:
+            self._inflight_ops.pop(coord_id, None)
+
+    def _join_inflight(self, coord_id: str, timeout: float = 30.0) -> None:
+        with self._inflight_lock:
+            fut = self._inflight_ops.get(coord_id)
+        if fut is not None:
+            cf.wait([fut], timeout=timeout)
 
     def _guarded(self, fn, *args) -> None:
         try:
             fn(*args)
         except Exception:                          # noqa: BLE001
             traceback.print_exc()
+
+    def _suspend_if_running(self, coord_id: str, reason: str) -> None:
+        """Monitor-driven suspend: losing the race to another state change
+        (a concurrent recovery, terminate, or an earlier suspend that just
+        won) is expected — swallow it instead of stack-tracing."""
+        try:
+            self.suspend(coord_id, reason)
+        except (RuntimeError, KeyError):
+            pass
+
+    def _seed_step_counter(self, coord: Coordinator) -> None:
+        """Re-seed the save counter from the newest COMMITTED image.
+
+        Every restore path must do this: a fresh manager (service restart,
+        clone target) or a restore to an earlier image would otherwise
+        count from 0 again — the next save would clobber newer images and
+        corrupt keep_last pruning / latest() ordering."""
+        latest = self.ckpt.latest(coord)
+        if latest is not None:
+            cur = self._step_counter.get(coord.coord_id, 0)
+            self._step_counter[coord.coord_id] = max(cur, latest)
+
+    def _aborted(self, coord: Coordinator) -> bool:
+        """True when this recovery no longer owns the coordinator (a
+        concurrent terminate moved it out of RESTARTING)."""
+        with coord.lock:
+            return coord.state != CoordState.RESTARTING
 
     def _recover(self, coord_id: str, kind: str) -> None:
         coord = self.db.get(coord_id)
@@ -179,25 +255,57 @@ class AppManager:
             self.db.transition(coord, CoordState.RESTARTING, kind)
         self.monitor.unwatch(coord_id)
         coord.recoveries += 1
+        t0 = time.monotonic()
         try:
             coord.app.stop()
-            self.ckpt.wait(coord)
+            err = self.ckpt.wait(coord, strict=False)
+            if err is not None:
+                # an in-flight save died (e.g. transient storage fault);
+                # the newest COMMITTED image is still the restore point
+                coord.metrics["last_save_error"] = repr(err)
+            if self._aborted(coord):
+                return
             if kind == "vm_failure":
                 # passive recovery: replace unreachable VMs with fresh ones
                 self.provision.forget(coord.vms)
-                coord.vms = self.cloud.replace_failed(
+                fresh = self.cloud.replace_failed(
                     coord.asr.backend, coord.vms, coord.asr.template,
                     coord.coord_id)
-                self.provision.provision(coord.vms, coord.asr.provision_cmds,
+                with coord.lock:
+                    coord.vms = fresh
+                if self._aborted(coord):
+                    return                  # terminate() now owns the VMs
+                self.provision.provision(fresh, coord.asr.provision_cmds,
                                          **self._provision_cost(coord.asr.backend))
-            state = None
-            latest = self.ckpt.latest(coord)
-            if latest is not None:
-                state = self.ckpt.load(coord, latest)
-            self._start_app(coord, state)
+            state = self._load_latest_with_retry(coord)
+            self._seed_step_counter(coord)
+            if self._aborted(coord):
+                return
+            if self._start_app(coord, state):
+                coord.metrics["last_recovery_s"] = time.monotonic() - t0
         except Exception as e:                     # noqa: BLE001
             coord.error = str(e)
-            self.db.transition(coord, CoordState.ERROR, str(e))
+            # Only flag ERROR while we still own the coordinator: if a
+            # terminate() took it (TERMINATING), moving to ERROR — legal
+            # from TERMINATING — would wedge terminate's final TERMINATED
+            # transition.
+            with coord.lock:
+                if coord.state == CoordState.RESTARTING:
+                    self.db.transition(coord, CoordState.ERROR, str(e))
+
+    def _load_latest_with_retry(self, coord: Coordinator) -> Any:
+        """Restore the newest COMMITTED image, absorbing transient storage
+        errors (bounded retries). Returns None when no image exists yet."""
+        for attempt in range(self.recover_retries + 1):
+            try:
+                latest = self.ckpt.latest(coord)
+                if latest is None:
+                    return None
+                return self.ckpt.load(coord, latest)
+            except Exception:                      # noqa: BLE001
+                if attempt >= self.recover_retries:
+                    raise
+                time.sleep(self.retry_backoff_s * (attempt + 1))
 
     def restart_from(self, coord_id: str, step: Optional[int] = None) -> None:
         """POST /coordinators/:id/checkpoints/:id — restart from an image.
@@ -221,7 +329,7 @@ class AppManager:
                 fresh_clone = True
             else:
                 raise RuntimeError(f"cannot restart from {coord.state.value}")
-        self.ckpt.wait(coord)
+        self.ckpt.wait(coord, strict=False)
         if fresh_clone:
             self._bringup_infra(coord)
         elif not coord.vms:
@@ -238,6 +346,10 @@ class AppManager:
             self.provision.provision(coord.vms, coord.asr.provision_cmds,
                                      **self._provision_cost(coord.asr.backend))
         state = self.ckpt.load(coord, step)
+        # seed from the NEWEST committed image (not the restored one): a
+        # user restarting from an earlier image must not have the next
+        # save clobber the newer images still in the store
+        self._seed_step_counter(coord)
         self._start_app(coord, state)
 
     # ------------------------------------------------------------------
@@ -251,15 +363,30 @@ class AppManager:
             state = coord.app.checkpoint_state()
             step = self._step_counter.get(coord_id, 0) + 1
             self._step_counter[coord_id] = step
-            self.ckpt.save(coord, step, state, blocking=True,
-                           metadata={"suspend": reason})
+        # The blocking swap-out write runs OUTSIDE coord.lock: holding the
+        # lock across a full save would stall checkpoint_now, the periodic
+        # daemon and monitor-event handling for this coordinator for the
+        # whole write. The snapshot above is already step-consistent.
+        self.ckpt.save(coord, step, state, blocking=True,
+                       metadata={"suspend": reason})
+        with coord.lock:
+            if coord.state != CoordState.RUNNING:
+                # a recovery/terminate won the race during the write; the
+                # image is committed and harmless, but the suspend is off
+                raise RuntimeError(
+                    f"suspend({coord_id}) aborted: state became "
+                    f"{coord.state.value} during swap-out")
             coord.app.stop()
+            # detach monitoring + the VM handles BEFORE publishing
+            # SUSPENDED: the instant the new state is visible, a resume
+            # may allocate a fresh cluster and re-watch — teardown must
+            # only ever touch the old cluster
+            self.monitor.unwatch(coord_id)
+            self._next_ckpt.pop(coord_id, None)
+            old_vms, coord.vms = coord.vms, []
             self.db.transition(coord, CoordState.SUSPENDED, reason)
-        self.monitor.unwatch(coord_id)
-        self._next_ckpt.pop(coord_id, None)
-        self.provision.forget(coord.vms)
-        self.cloud.destroy_cluster(coord.asr.backend, coord.vms)
-        coord.vms = []
+        self.provision.forget(old_vms)
+        self.cloud.destroy_cluster(coord.asr.backend, old_vms)
 
     def resume(self, coord_id: str, block: bool = True) -> None:
         coord = self.db.get(coord_id)
@@ -269,17 +396,47 @@ class AppManager:
             self.db.transition(coord, CoordState.RESTARTING, "resume")
 
         def _do():
+            asr = coord.asr
             try:
-                asr = coord.asr
-                coord.vms = self.cloud.create_cluster(
+                fresh = self.cloud.create_cluster(
                     asr.backend, asr.n_vms, asr.template, coord.coord_id)
+            except CapacityError as e:
+                # capacity raced away between the scheduler's check and
+                # the claim: the job is still safely swapped out — return
+                # to SUSPENDED so a later tick retries, don't wedge ERROR
+                # (unless a terminate took ownership mid-resume)
+                with coord.lock:
+                    if coord.state == CoordState.RESTARTING:
+                        self.db.transition(coord, CoordState.SUSPENDED,
+                                           f"resume aborted: {e}")
+                return
+            except Exception as e:                 # noqa: BLE001
+                # any other allocation failure must not strand the job in
+                # RESTARTING (or kill a blocking caller's loop thread)
+                coord.error = str(e)
+                with coord.lock:
+                    if coord.state == CoordState.RESTARTING:
+                        self.db.transition(coord, CoordState.ERROR, str(e))
+                return
+            with coord.lock:
+                owned = coord.state == CoordState.RESTARTING
+                if owned:
+                    coord.vms = fresh
+            if not owned:
+                # terminate() raced the resume: release what we claimed
+                self.cloud.destroy_cluster(asr.backend, fresh)
+                return
+            try:
                 self.provision.provision(coord.vms, asr.provision_cmds,
                                          **self._provision_cost(asr.backend))
                 state = self.ckpt.load(coord)
+                self._seed_step_counter(coord)
                 self._start_app(coord, state)
             except Exception as e:                 # noqa: BLE001
                 coord.error = str(e)
-                self.db.transition(coord, CoordState.ERROR, str(e))
+                with coord.lock:
+                    if coord.state == CoordState.RESTARTING:
+                        self.db.transition(coord, CoordState.ERROR, str(e))
 
         if block:
             _do()
@@ -295,9 +452,13 @@ class AppManager:
             self.db.transition(coord, CoordState.TERMINATING, "user")
         self.monitor.unwatch(coord_id)
         self._next_ckpt.pop(coord_id, None)
+        # Join any in-flight recovery/suspend: it aborts at its next state
+        # check (the TERMINATING transition above makes _aborted() true)
+        # and must stop touching coord.vms before we destroy them.
+        self._join_inflight(coord_id)
         if coord.app is not None:
             coord.app.stop()
-        self.ckpt.wait(coord)
+        self.ckpt.wait(coord, strict=False)
         if coord.vms:
             self.provision.forget(coord.vms)
             self.cloud.destroy_cluster(coord.asr.backend, coord.vms)

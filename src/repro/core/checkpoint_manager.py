@@ -97,11 +97,23 @@ class CheckpointManager:
                     plane=self._plane_for(coord))
             return self._async[coord.coord_id]
 
-    def wait(self, coord: Coordinator) -> None:
+    def wait(self, coord: Coordinator, strict: bool = True):
+        """Join any in-flight async save. strict=False swallows a failed
+        save (returning the exception): the recovery/terminate paths only
+        need quiescence — the newest COMMITTED image is still intact, the
+        torn step is invisible, and its orphan chunks are swept by GC."""
         with self._lock:
             ck = self._async.get(coord.coord_id)
-        if ck is not None:
+        if ck is None:
+            return None
+        if strict:
             ck.wait()
+            return None
+        try:
+            ck.wait()
+        except Exception as e:                     # noqa: BLE001
+            return e
+        return None
 
     # ---- query / restore -------------------------------------------------
     def list_images(self, coord: Coordinator) -> List[int]:

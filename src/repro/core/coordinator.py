@@ -43,8 +43,10 @@ TRANSITIONS: Dict[CoordState, tuple] = {
                          CoordState.TERMINATING, CoordState.ERROR),
     CoordState.SUSPENDED: (CoordState.RESTARTING, CoordState.TERMINATING,
                            CoordState.ERROR),
-    CoordState.RESTARTING: (CoordState.RUNNING, CoordState.ERROR,
-                            CoordState.TERMINATING),
+    # RESTARTING -> SUSPENDED: a resume aborted before any VM was claimed
+    # (capacity raced away) falls back to stable storage, not ERROR.
+    CoordState.RESTARTING: (CoordState.RUNNING, CoordState.SUSPENDED,
+                            CoordState.ERROR, CoordState.TERMINATING),
     CoordState.TERMINATING: (CoordState.TERMINATED, CoordState.ERROR),
     CoordState.TERMINATED: (),
     CoordState.ERROR: (CoordState.TERMINATING, CoordState.RESTARTING),

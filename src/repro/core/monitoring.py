@@ -62,20 +62,32 @@ def heartbeat_roundtrip(vms: Sequence[VMHandle],
     depth = tree_depth(n)
     sim_sleep(2 * depth * hop_latency_s)          # critical path
     unreachable = [vm.vm_id for vm in vms if not vm.reachable]
+    reachable = [vm for vm in vms if vm.reachable]
     unhealthy: List[str] = []
-    if health_hook is not None and not health_hook():
-        # the hook is application-scoped; attribute it to the root daemon
-        unhealthy.append(vms[0].vm_id if n else "app")
+    # Only ask the app when it can answer: with every VM unreachable there
+    # is no daemon to run the hook, and a raising hook is an *unhealthy
+    # application*, not a dead monitor thread (the old behaviour let a
+    # broken user hook kill the polling loop).
+    if health_hook is not None and reachable:
+        try:
+            healthy = bool(health_hook())
+        except Exception:                          # noqa: BLE001
+            healthy = False
+        if not healthy:
+            # the hook is application-scoped; attribute it to the root daemon
+            unhealthy.append(vms[0].vm_id)
     # performance health: hosts running significantly slower than the
     # fleet's typical pace (median-relative — uniform slowness is the
-    # workload, an outlier is a straggler)
-    slowdowns = sorted(vm.host.slowdown for vm in vms if vm.reachable)
+    # workload, an outlier is a straggler). With <2 reachable hosts (or a
+    # degenerate zero median) there is no pace baseline: report none.
+    slowdowns = sorted(vm.host.slowdown for vm in reachable)
     stragglers = []
     if len(slowdowns) >= 2:
         median = slowdowns[len(slowdowns) // 2]
-        for vm in vms:
-            if vm.reachable and vm.host.slowdown > straggler_threshold * median:
-                stragglers.append(vm.vm_id)
+        if median > 0:
+            for vm in reachable:
+                if vm.host.slowdown > straggler_threshold * median:
+                    stragglers.append(vm.vm_id)
     return HealthReport(unreachable, unhealthy, stragglers,
                         rtt_s=2 * depth * hop_latency_s)
 
@@ -89,15 +101,22 @@ class MonitoringManager:
     """
 
     def __init__(self, recover_cb: Callable[[str, str], None],
-                 poll_interval_s: float = 0.05):
+                 poll_interval_s: float = 0.05,
+                 native_grace_polls: int = 3):
         self._recover_cb = recover_cb
         self.poll_interval_s = poll_interval_s
+        # Native backends notify VM *crashes*, but a network partition is
+        # invisible to the IaaS — after this many consecutive unreachable
+        # polls the tree declares the VM failed anyway (paper §6.3's
+        # cloud-agnostic path backstopping the notification path).
+        self.native_grace_polls = native_grace_polls
         self._watched: Dict[str, dict] = {}
         self._lock = threading.Lock()
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self.heartbeats = 0
         self.native_notifications = 0
+        self.partition_fallbacks = 0
 
     # ---- registration --------------------------------------------------
     def watch(self, coord_id: str, vms: Sequence[VMHandle],
@@ -106,7 +125,7 @@ class MonitoringManager:
         with self._lock:
             self._watched[coord_id] = {
                 "vms": list(vms), "hook": health_hook,
-                "native": native_notifications, "suspended_polls": 0,
+                "native": native_notifications, "unreachable_polls": 0,
             }
 
     def unwatch(self, coord_id: str) -> None:
@@ -136,15 +155,48 @@ class MonitoringManager:
             with self._lock:
                 watched = dict(self._watched)
             for coord_id, info in watched.items():
-                report = self.check_once(coord_id)
-                if report is None:
+                try:
+                    self._poll_one(coord_id, info)
+                except Exception:                  # noqa: BLE001
+                    # one bad probe must not kill the monitor for everyone
                     continue
-                if report.unreachable and not info["native"]:
-                    self._recover_cb(coord_id, "vm_failure")
-                elif report.unhealthy:
-                    self._recover_cb(coord_id, "app_failure")
-                elif report.stragglers:
-                    self._recover_cb(coord_id, "straggler")
+
+    def _poll_one(self, coord_id: str, info: dict) -> None:
+        report = self.check_once(coord_id)
+        if report is None:
+            return
+        if report.unreachable:
+            if not info["native"]:
+                self._recover_cb(coord_id, "vm_failure")
+            elif self._bump_unreachable(coord_id) >= self.native_grace_polls:
+                # partition fallback: the IaaS never reported a crash, yet
+                # the tree cannot reach the VM — declare it failed. Reset
+                # the streak so one partition counts once (the recovery's
+                # unwatch lands asynchronously; later ticks must restart
+                # the grace window, not re-count the same fault).
+                self._reset_unreachable(coord_id)
+                self.partition_fallbacks += 1
+                self._recover_cb(coord_id, "vm_failure")
+            return
+        self._reset_unreachable(coord_id)
+        if report.unhealthy:
+            self._recover_cb(coord_id, "app_failure")
+        elif report.stragglers:
+            self._recover_cb(coord_id, "straggler")
+
+    def _bump_unreachable(self, coord_id: str) -> int:
+        with self._lock:
+            info = self._watched.get(coord_id)
+            if info is None:
+                return 0
+            info["unreachable_polls"] += 1
+            return info["unreachable_polls"]
+
+    def _reset_unreachable(self, coord_id: str) -> None:
+        with self._lock:
+            info = self._watched.get(coord_id)
+            if info is not None:
+                info["unreachable_polls"] = 0
 
     def check_once(self, coord_id: str) -> Optional[HealthReport]:
         with self._lock:

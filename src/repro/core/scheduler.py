@@ -29,6 +29,7 @@ class PriorityScheduler:
         self._thread: Optional[threading.Thread] = None
         self.preemptions = 0
         self.resumes = 0
+        self.capacity_races = 0          # resumes aborted back to SUSPENDED
 
     # ------------------------------------------------------------------
     def submit(self, asr: ASR) -> Optional[str]:
@@ -113,7 +114,12 @@ class PriorityScheduler:
                         continue
                     try:
                         self.service.apps.resume(c.coord_id, block=True)
-                        self.resumes += 1
+                        if c.state == CoordState.SUSPENDED:
+                            # capacity raced away mid-resume: the app fell
+                            # back to stable storage; a later tick retries
+                            self.capacity_races += 1
+                        else:
+                            self.resumes += 1
                     except RuntimeError:
                         pass
 

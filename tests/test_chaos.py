@@ -1,0 +1,404 @@
+"""Chaos harness + recovery-control-plane regression suite.
+
+Covers: seeded fault-schedule determinism and scenario replay; the
+recovery races the harness exposed (terminate during RESTARTING, double
+vm_failure, straggler→suspend debounce, suspend holding coord.lock across
+a save); step-counter reseeding after every restore path; mid-save storage
+faults vs the COMMITTED protocol; and monitor robustness (raising health
+hooks, total partitions, native-backend partition fallback).
+"""
+import threading
+import time
+
+import pytest
+
+from repro.ckpt import ChaosStorageError, FaultyStore, InMemoryStore
+from repro.ckpt.reader import list_steps
+from repro.clusters import OpenStackBackend, SnoozeBackend
+from repro.core import (ASR, CACSService, ChaosHealthHook, CheckpointPolicy,
+                        CoordState, FaultEvent, FaultKind, FaultSchedule,
+                        SimulatedApp, run_scenario)
+from repro.core.monitoring import heartbeat_roundtrip
+
+
+def _mk_service(backend_cls=SnoozeBackend, n_hosts=16, store=None,
+                **svc_kw):
+    backend = backend_cls(n_hosts=n_hosts)
+    store = store if store is not None else InMemoryStore()
+    svc = CACSService({backend.name: backend}, {"default": store}, **svc_kw)
+    return svc, backend, store
+
+
+def _submit(svc, backend, n_vms=4, period=0.0, hook=None, **app_kw):
+    asr = ASR(name="chaos-app", n_vms=n_vms, backend=backend.name,
+              app_factory=lambda: SimulatedApp(iter_time_s=0.5,
+                                               state_mb=0.05, **app_kw),
+              policy=CheckpointPolicy(period_s=period, keep_last=3),
+              health_hook=hook)
+    cid = svc.submit(asr)
+    svc.wait_for_state(cid, CoordState.RUNNING, timeout=30)
+    return cid
+
+
+def _wait(pred, timeout=30.0):
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(0.01)
+    return False
+
+
+# ---------------------------------------------------------------------------
+# determinism
+# ---------------------------------------------------------------------------
+
+def test_schedule_generation_deterministic():
+    a = FaultSchedule.generate(seed=3, n_events=6)
+    b = FaultSchedule.generate(seed=3, n_events=6)
+    c = FaultSchedule.generate(seed=4, n_events=6)
+    assert a.events == b.events
+    assert a.events != c.events
+    assert all(e.at_s <= n.at_s for e, n in zip(a.events, a.events[1:]))
+
+
+def test_scenario_replays_deterministically():
+    sched = FaultSchedule.generate(seed=5, n_events=3)
+    r1 = run_scenario(sched, settle_timeout_s=30)
+    r2 = run_scenario(sched, settle_timeout_s=30)
+    assert r1.trace == r2.trace
+    assert r1.sim_faults == r2.sim_faults
+    assert r1.recoveries == r2.recoveries
+    assert r1.final_state == r2.final_state
+
+
+def test_vm_crash_scenario_measures_mttr():
+    sched = FaultSchedule(seed=1, events=[
+        FaultEvent(at_s=1.0, kind=FaultKind.VM_CRASH, vm_index=1)])
+    res = run_scenario(sched, settle_timeout_s=30)
+    (o,) = res.outcomes
+    assert o.ok and o.final_state == "RUNNING"
+    assert res.recoveries == 1
+    assert o.detection_s is not None and o.detection_s >= 0
+    assert o.restore_s is not None and o.restore_s > 0
+    assert o.mttr_s is not None and o.mttr_s >= o.restore_s
+
+
+def test_storyline_all_fault_classes_recover():
+    res = run_scenario(FaultSchedule.storyline(seed=42),
+                       settle_timeout_s=60)
+    assert res.all_ok, [o for o in res.outcomes if not o.ok]
+    assert res.final_state == "RUNNING"
+    kinds = {o.event.kind for o in res.outcomes}
+    assert kinds == set(FaultKind)
+
+
+# ---------------------------------------------------------------------------
+# step-counter reseeding (recovery must not restart numbering at 1)
+# ---------------------------------------------------------------------------
+
+def test_step_counter_reseeds_after_recovery_on_fresh_manager():
+    svc, backend, _ = _mk_service()
+    try:
+        cid = _submit(svc, backend)
+        s1 = svc.trigger_checkpoint(cid)
+        s2 = svc.trigger_checkpoint(cid)
+        assert (s1, s2) == (1, 2)
+        # simulate a restarted Application Manager: in-memory counter gone
+        svc.apps._step_counter.clear()
+        coord = svc.db.get(cid)
+        backend.sim.fail_host(coord.vms[0].host.host_id)
+        assert _wait(lambda: coord.recoveries >= 1
+                     and coord.state == CoordState.RUNNING)
+        s3 = svc.trigger_checkpoint(cid)
+        assert s3 == s2 + 1, "post-recovery save must continue numbering"
+        assert svc.list_checkpoints(cid)[-1] == s3
+    finally:
+        svc.shutdown()
+
+
+def test_restart_from_earlier_image_does_not_clobber_newer():
+    svc, backend, store = _mk_service()
+    try:
+        cid = _submit(svc, backend)
+        s1 = svc.trigger_checkpoint(cid)
+        s2 = svc.trigger_checkpoint(cid)
+        s3 = svc.trigger_checkpoint(cid)
+        svc.apps._step_counter.clear()      # fresh-manager worst case
+        svc.restart_from(cid, s1)           # user picks the EARLIEST image
+        s4 = svc.trigger_checkpoint(cid)
+        assert s4 == s3 + 1, "next save must not overwrite newer images"
+        steps = svc.list_checkpoints(cid)
+        assert steps[-1] == s4
+        assert s2 in steps or s3 in steps   # keep_last=3 pruned oldest only
+    finally:
+        svc.shutdown()
+
+
+def test_resume_reseeds_step_counter():
+    svc, backend, _ = _mk_service()
+    try:
+        cid = _submit(svc, backend)
+        svc.trigger_checkpoint(cid)
+        svc.apps.suspend(cid)               # writes step 2 (swap-out image)
+        svc.apps._step_counter.clear()
+        svc.apps.resume(cid)
+        assert svc.db.get(cid).state == CoordState.RUNNING
+        assert svc.trigger_checkpoint(cid) == 3
+    finally:
+        svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# races the chaos harness exposed
+# ---------------------------------------------------------------------------
+
+def test_straggler_suspend_debounced():
+    # the swap-out save is slow (store latency), so the monitor re-reports
+    # the straggler many times while the suspend is in flight — duplicates
+    # must be dropped, not raced into RuntimeErrors
+    svc, backend, _ = _mk_service(store=InMemoryStore(latency_s=0.05))
+    try:
+        cid = _submit(svc, backend, n_vms=4)
+        coord = svc.db.get(cid)
+        backend.sim.degrade_host(coord.vms[1].host.host_id, slowdown=100.0)
+        assert _wait(lambda: coord.state == CoordState.SUSPENDED)
+        assert svc.apps.events_deduped >= 1
+        suspended = [h for h in coord.history if h[1] == "SUSPENDED"]
+        assert len(suspended) == 1
+        assert not any(h[1] == "ERROR" for h in coord.history)
+    finally:
+        svc.shutdown()
+
+
+def test_suspend_does_not_hold_lock_during_save():
+    gate = threading.Event()
+    hit = threading.Event()
+
+    class GateStore(InMemoryStore):
+        def put(self, key, data):
+            if "/cas/" in key and not hit.is_set():
+                hit.set()
+                assert gate.wait(10), "test gate never released"
+            super().put(key, data)
+
+    svc, backend, _ = _mk_service(store=GateStore())
+    try:
+        cid = _submit(svc, backend)
+        coord = svc.db.get(cid)
+        t = threading.Thread(target=svc.apps.suspend, args=(cid,))
+        t.start()
+        assert hit.wait(10), "suspend never reached the store"
+        # the swap-out write is in flight; coord.lock must NOT be held —
+        # checkpoint_now / the daemon / monitor handling all need it
+        acquired = coord.lock.acquire(timeout=2)
+        assert acquired, "suspend held coord.lock across the blocking save"
+        coord.lock.release()
+        gate.set()
+        t.join(timeout=10)
+        assert coord.state == CoordState.SUSPENDED
+    finally:
+        gate.set()
+        svc.shutdown()
+
+
+def test_terminate_during_restarting_is_clean():
+    # OpenStack's slow allocation opens a wide RESTARTING window
+    svc, backend, _ = _mk_service(backend_cls=OpenStackBackend)
+    try:
+        cid = _submit(svc, backend)
+        svc.trigger_checkpoint(cid)
+        coord = svc.db.get(cid)
+        backend.sim.fail_host(coord.vms[0].host.host_id)
+        assert _wait(lambda: coord.state == CoordState.RESTARTING)
+        final = svc.delete_coordinator(cid)
+        assert final["state"] == "TERMINATED"
+        assert not any(h[1] == "ERROR" for h in coord.history)
+        with pytest.raises(KeyError):
+            svc.db.get(cid)
+        # no leaked allocations: nothing in the sim still belongs to cid
+        leaked = [h.host_id for h in backend.sim._hosts.values()
+                  if h.owner == cid]
+        assert not leaked
+    finally:
+        svc.shutdown()
+
+
+def test_double_vm_failure_triggers_single_recovery():
+    svc, backend, _ = _mk_service()
+    try:
+        cid = _submit(svc, backend)
+        svc.trigger_checkpoint(cid)
+        coord = svc.db.get(cid)
+        backend.sim.fail_host(coord.vms[0].host.host_id)
+        backend.sim.fail_host(coord.vms[2].host.host_id)
+        assert _wait(lambda: coord.recoveries >= 1
+                     and coord.state == CoordState.RUNNING)
+        time.sleep(0.3)           # any spurious second recovery would land
+        assert coord.recoveries == 1
+        assert all(vm.reachable for vm in coord.vms)
+        assert coord.app.restarts == 1
+        assert svc.apps.events_deduped >= 1   # second notification dropped
+    finally:
+        svc.shutdown()
+
+
+def test_immediate_resume_after_suspend_gets_healthy_cluster():
+    # SUSPENDED is published only after the old cluster is detached from
+    # coord.vms: a resume racing the suspend's teardown must end up on a
+    # fresh, reachable cluster (not one the suspend thread then destroys)
+    svc, backend, _ = _mk_service(store=InMemoryStore(latency_s=0.02))
+    try:
+        cid = _submit(svc, backend, n_vms=4)
+        coord = svc.db.get(cid)
+        backend.sim.degrade_host(coord.vms[1].host.host_id, slowdown=100.0)
+        assert _wait(lambda: coord.state == CoordState.SUSPENDED)
+        svc.apps.resume(cid)                 # as fast after SUSPENDED as
+        assert coord.state == CoordState.RUNNING      # the API allows
+        assert len(coord.vms) == 4
+        assert all(vm.reachable for vm in coord.vms)
+        time.sleep(0.2)                      # suspend teardown fully done
+        assert all(vm.reachable for vm in coord.vms), \
+            "suspend teardown destroyed the resumed cluster"
+    finally:
+        svc.shutdown()
+
+
+def test_resume_capacity_race_falls_back_to_suspended():
+    svc, backend, _ = _mk_service(n_hosts=8)
+    try:
+        cid = _submit(svc, backend, n_vms=4)
+        svc.trigger_checkpoint(cid)
+        svc.apps.suspend(cid)
+        # another tenant grabs most of the cloud while we're swapped out
+        stolen = backend.sim.allocate(5, "other-tenant")
+        svc.apps.resume(cid)                 # capacity check races away
+        coord = svc.db.get(cid)
+        assert coord.state == CoordState.SUSPENDED, \
+            "failed resume must fall back to SUSPENDED, not ERROR"
+        backend.sim.release(stolen)
+        svc.apps.resume(cid)
+        assert coord.state == CoordState.RUNNING
+    finally:
+        svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# storage faults vs the COMMITTED protocol
+# ---------------------------------------------------------------------------
+
+def test_put_fault_mid_save_leaves_previous_committed_loadable():
+    store = FaultyStore(InMemoryStore())
+    svc, backend, _ = _mk_service(store=store)
+    try:
+        cid = _submit(svc, backend)
+        s1 = svc.trigger_checkpoint(cid)
+        coord = svc.db.get(cid)
+        before = svc.ckpt.load(coord, s1)
+        store.arm_put_errors(1)
+        with pytest.raises((ChaosStorageError, IOError)):
+            svc.trigger_checkpoint(cid)
+        store.disarm()
+        # the torn step is invisible; the previous image restores intact
+        assert list_steps(store, coord.ckpt_prefix) == [s1]
+        after = svc.ckpt.load(coord, None)
+        assert after["iteration"] == before["iteration"]
+        # and the plane is healthy again: the next save commits past it
+        s_next = svc.trigger_checkpoint(cid)
+        assert s_next > s1
+        assert list_steps(store, coord.ckpt_prefix)[-1] == s_next
+    finally:
+        svc.shutdown()
+
+
+def test_periodic_daemon_survives_async_save_fault():
+    store = FaultyStore(InMemoryStore())
+    svc, backend, _ = _mk_service(store=store)
+    try:
+        cid = _submit(svc, backend, period=0.08)
+        coord = svc.db.get(cid)
+        assert _wait(lambda: len(list_steps(store, coord.ckpt_prefix)) >= 1)
+        store.arm_put_errors(1)              # one periodic save will die
+        assert _wait(lambda: store.faults_injected >= 1)
+        n_after_fault = len(list_steps(store, coord.ckpt_prefix))
+        # the daemon must keep checkpointing this app afterwards
+        assert _wait(lambda: len(list_steps(store, coord.ckpt_prefix))
+                     > n_after_fault), "periodic daemon died after a fault"
+        ck = svc.ckpt._async.get(cid)
+        assert ck is not None and ck.failed_saves >= 1
+        assert ck.last_error is not None
+    finally:
+        svc.shutdown()
+
+
+def test_recovery_restores_despite_transient_get_faults():
+    store = FaultyStore(InMemoryStore())
+    svc, backend, _ = _mk_service(store=store)
+    try:
+        cid = _submit(svc, backend)
+        svc.trigger_checkpoint(cid)
+        coord = svc.db.get(cid)
+        store.arm_get_errors(1)
+        backend.sim.fail_host(coord.vms[0].host.host_id)
+        assert _wait(lambda: coord.recoveries >= 1
+                     and coord.state == CoordState.RUNNING), \
+            "transient get fault during restore must be retried"
+        assert not any(h[1] == "ERROR" for h in coord.history)
+    finally:
+        svc.shutdown()
+
+
+# ---------------------------------------------------------------------------
+# monitor robustness
+# ---------------------------------------------------------------------------
+
+def test_monitor_survives_raising_health_hook():
+    svc, backend, _ = _mk_service()
+    try:
+        hook = ChaosHealthHook()
+        cid = _submit(svc, backend, hook=hook)
+        svc.trigger_checkpoint(cid)
+        coord = svc.db.get(cid)
+        hook.arm(1)                          # next health poll RAISES
+        assert _wait(lambda: coord.recoveries >= 1
+                     and coord.state == CoordState.RUNNING)
+        mon = svc.apps.monitor
+        assert mon._thread is not None and mon._thread.is_alive()
+        hb = mon.heartbeats
+        assert _wait(lambda: mon.heartbeats > hb), \
+            "monitor thread stopped polling after a raising hook"
+    finally:
+        svc.shutdown()
+
+
+def test_partition_detected_on_native_backend_via_fallback():
+    svc, backend, _ = _mk_service()          # Snooze: native notifications
+    try:
+        cid = _submit(svc, backend)
+        svc.trigger_checkpoint(cid)
+        coord = svc.db.get(cid)
+        backend.sim.partition_host(coord.vms[1].host.host_id)
+        assert _wait(lambda: coord.recoveries >= 1
+                     and coord.state == CoordState.RUNNING), \
+            "partition is invisible to the IaaS; the tree must catch it"
+        assert svc.apps.monitor.native_notifications == 0
+        assert svc.apps.monitor.partition_fallbacks >= 1
+        assert all(vm.reachable for vm in coord.vms)
+    finally:
+        svc.shutdown()
+
+
+def test_heartbeat_with_every_vm_unreachable():
+    backend = SnoozeBackend(n_hosts=8)
+    vms = backend.allocate_vms(3, None, owner="t")
+    for vm in vms:
+        backend.sim.partition_host(vm.host.host_id)
+
+    def exploding_hook():
+        raise RuntimeError("no one to ask")
+
+    rep = heartbeat_roundtrip(vms, exploding_hook)
+    assert sorted(rep.unreachable) == sorted(vm.vm_id for vm in vms)
+    assert rep.unhealthy == []               # hook skipped: app unreachable
+    assert rep.stragglers == []              # no pace baseline
+    assert not rep.ok
