@@ -1,14 +1,15 @@
 # CACS reproduction — developer entry points.
 #
-#   make test         tier-1 test suite (the command ROADMAP.md pins)
-#   make bench-smoke  fast benchmark subset proving the measurement paths
-#   make chaos-smoke  seeded fault-recovery scenario sweep (MTTR per class)
-#   make docs-lint    sanity-check docs: files exist, internal refs resolve
+#   make test            tier-1 test suite (the command ROADMAP.md pins)
+#   make bench-smoke     fast benchmark subset proving the measurement paths
+#   make chaos-smoke     seeded fault-recovery scenario sweep (MTTR per class)
+#   make failover-smoke  seeded cross-cloud outage -> standby failover
+#   make docs-lint       sanity-check docs: files exist, internal refs resolve
 
 PY      ?= python
 PYPATH  := src
 
-.PHONY: test bench-smoke chaos-smoke docs-lint
+.PHONY: test bench-smoke chaos-smoke failover-smoke docs-lint
 
 test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
@@ -18,6 +19,9 @@ bench-smoke:
 
 chaos-smoke:
 	CHAOS_TRIALS=1 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only fault_recovery
+
+failover-smoke:
+	FAILOVER_TRIALS=1 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only replication
 
 docs-lint:
 	$(PY) scripts/docs_lint.py

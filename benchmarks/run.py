@@ -20,7 +20,7 @@ import time
 import traceback
 
 ALL = ("fig3", "table2", "table2incr", "fig4", "fig5", "fig6",
-       "ckpt_path", "pplane", "fault_recovery")
+       "ckpt_path", "pplane", "fault_recovery", "replication")
 
 
 def main() -> None:
@@ -34,7 +34,7 @@ def main() -> None:
 
     from benchmarks import (ckpt_path, fault_recovery, fig3_scalability,
                             fig4_service_load, fig5_migration, fig6_backends,
-                            parallel_plane, table2_image_size,
+                            parallel_plane, replication, table2_image_size,
                             table2_incremental)
     from benchmarks.common import CSV_ROWS
 
@@ -48,6 +48,7 @@ def main() -> None:
         "ckpt_path": ckpt_path,
         "pplane": parallel_plane,
         "fault_recovery": fault_recovery,
+        "replication": replication,
     }
     print("bench,param,metric,value")
     failures = 0

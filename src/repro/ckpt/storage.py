@@ -42,6 +42,11 @@ class ObjectStore:
         self.dedup_misses = 0             # puts that actually wrote
         self.dedup_bytes_skipped = 0      # encoded bytes NOT rewritten
         self.gc_deleted = 0               # chunks removed by refcount-aware delete
+        # replica-aware transfer counters: chunks sourced from a local
+        # replica (shipped earlier by core/replication.py) instead of being
+        # re-transferred cross-cloud — the warm-migration savings
+        self.replica_hits = 0
+        self.replica_bytes_local = 0
         self._meta_lock = threading.Lock()
         self._inflight_cv = threading.Condition(self._meta_lock)
         self._inflight_puts: Set[str] = set()
@@ -111,7 +116,9 @@ class ObjectStore:
             return {"dedup_hits": self.dedup_hits,
                     "dedup_misses": self.dedup_misses,
                     "dedup_bytes_skipped": self.dedup_bytes_skipped,
-                    "gc_deleted": self.gc_deleted}
+                    "gc_deleted": self.gc_deleted,
+                    "replica_hits": self.replica_hits,
+                    "replica_bytes_local": self.replica_bytes_local}
 
     def count_ingest_hit(self, nbytes: int) -> None:
         """Record an ingest-side dedup hit (upload_image skipping a chunk
@@ -119,6 +126,14 @@ class ObjectStore:
         with self._meta_lock:
             self.dedup_hits += 1
             self.dedup_bytes_skipped += nbytes
+
+    def count_replica_hit(self, nbytes: int) -> None:
+        """Record a warm-transfer hit: a chunk that would have crossed the
+        inter-cloud link was found in a local replica instead (shipped
+        earlier by the ImageReplicator) and copied store-locally."""
+        with self._meta_lock:
+            self.replica_hits += 1
+            self.replica_bytes_local += nbytes
 
     # Stores that upload lazily override this to block until durable.
     def flush(self) -> None:

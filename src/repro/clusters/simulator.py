@@ -67,6 +67,10 @@ class ClusterSim:
         self._lock = threading.RLock()
         self._failure_listeners: List[Callable[[VirtualHost], None]] = []
         self._fault_listeners: List[Callable[[str, str, float], None]] = []
+        # whole-cloud outage flag: every host partitioned AND allocation
+        # denied until heal_outage() (the paper's cross-cloud failover
+        # motivation — losing one entire cloud backend)
+        self.in_outage = False
         for i in range(n_hosts):
             hid = f"{name}-host-{i:04d}"
             self._hosts[hid] = VirtualHost(host_id=hid)
@@ -79,7 +83,7 @@ class ClusterSim:
     def idle_hosts(self) -> List[VirtualHost]:
         with self._lock:
             return [h for h in self._hosts.values()
-                    if h.state == HostState.IDLE]
+                    if h.state == HostState.IDLE and not h.partitioned]
 
     def host(self, host_id: str) -> VirtualHost:
         return self._hosts[host_id]
@@ -89,7 +93,7 @@ class ClusterSim:
         """Claim n hosts (raises if capacity is insufficient) + boot cost."""
         with self._lock:
             idle = [h for h in self._hosts.values()
-                    if h.state == HostState.IDLE]
+                    if h.state == HostState.IDLE and not h.partitioned]
             if len(idle) < n:
                 raise CapacityError(
                     f"{self.name}: requested {n} hosts, {len(idle)} idle")
@@ -110,7 +114,11 @@ class ClusterSim:
                     h.state = HostState.IDLE
                 h.owner = None
                 h.slowdown = 1.0
-                h.partitioned = False
+                # releasing a host must not punch a hole through a
+                # whole-cloud outage: the partition belongs to the cloud,
+                # not the owner
+                if not self.in_outage:
+                    h.partitioned = False
 
     # ---- failures ------------------------------------------------------
     def fail_host(self, host_id: str) -> None:
@@ -148,6 +156,27 @@ class ClusterSim:
         with self._lock:
             self._hosts[host_id].partitioned = False
         self._notify_fault("partition", host_id, 0.0)
+
+    def cloud_outage(self) -> None:
+        """Whole-cloud outage: every host — allocated or idle — becomes
+        unreachable and no new capacity can be claimed until
+        ``heal_outage``. Like ``partition_host``, the IaaS reports nothing:
+        detection is entirely on the monitoring tree (and recovery is
+        impossible on this backend — allocation raises CapacityError),
+        which is exactly the situation cross-cloud standby failover
+        (core/replication.py) exists for."""
+        with self._lock:
+            self.in_outage = True
+            for h in self._hosts.values():
+                h.partitioned = True
+        self._notify_fault("outage", "*", 1.0)
+
+    def heal_outage(self) -> None:
+        with self._lock:
+            self.in_outage = False
+            for h in self._hosts.values():
+                h.partitioned = False
+        self._notify_fault("outage", "*", 0.0)
 
     def on_failure(self, cb: Callable[[VirtualHost], None]) -> None:
         self._failure_listeners.append(cb)

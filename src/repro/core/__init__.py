@@ -14,6 +14,10 @@ from repro.core.coordinator import (ASR, CheckpointPolicy, Coordinator,
                                     CoordinatorDB, CoordState,
                                     InvalidTransition)
 from repro.core.migration import clone, cloudify, migrate, MigrationResult
+from repro.core.replication import (FailoverController, FailoverResult,
+                                    FailoverScenarioResult, ImageReplicator,
+                                    ReplicationPolicy, StandbyTarget,
+                                    run_failover_scenario)
 from repro.core.scheduler import PriorityScheduler
 from repro.core.service import CACSService
 
@@ -24,5 +28,8 @@ __all__ = [
     "ChaosController", "ChaosHealthHook", "FaultEvent", "FaultKind",
     "FaultOutcome", "FaultSchedule", "ScenarioResult", "run_scenario",
     "clone", "cloudify", "migrate", "MigrationResult",
+    "FailoverController", "FailoverResult", "FailoverScenarioResult",
+    "ImageReplicator", "ReplicationPolicy", "StandbyTarget",
+    "run_failover_scenario",
     "PriorityScheduler", "CACSService",
 ]

@@ -322,7 +322,9 @@ class AppManager:
             if coord.state == CoordState.RUNNING:
                 self.db.transition(coord, CoordState.RESTARTING, "user")
                 self.monitor.unwatch(coord_id)
-                coord.app.stop()
+                if coord.app is not None:      # rehydrated records
+                    coord.app.stop()           # (CoordinatorDB.load) have
+                                               # no live app to stop
             elif coord.state in (CoordState.SUSPENDED, CoordState.ERROR):
                 self.db.transition(coord, CoordState.RESTARTING, "user")
             elif coord.state == CoordState.CREATING:

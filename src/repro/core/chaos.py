@@ -63,11 +63,24 @@ class FaultKind(str, enum.Enum):
     STORAGE_PUT_FAULT = "storage_put_fault"
     STORAGE_GET_FAULT = "storage_get_fault"
     MONITOR_PARTITION = "monitor_partition"
+    # whole-cloud outage: every host of the backend partitioned at once
+    # AND allocation denied — unrecoverable on the home cloud by design;
+    # the expected outcome is cross-cloud failover (core/replication.py),
+    # not a same-cloud recovery cycle. Appended last so pre-existing
+    # seeded schedules (rng.choice over the earlier kinds) replay
+    # unchanged.
+    CLOUD_OUTAGE = "cloud_outage"
 
 
 # kinds whose outcome is a full recovery cycle back to RUNNING
 _RECOVERY_KINDS = (FaultKind.VM_CRASH, FaultKind.APP_FAILURE,
                    FaultKind.MONITOR_PARTITION, FaultKind.STORAGE_GET_FAULT)
+
+# kinds a single-cloud scenario can survive — the default pool for
+# FaultSchedule.generate (CLOUD_OUTAGE needs a standby cloud to end well,
+# so it must be opted into explicitly)
+SINGLE_CLOUD_KINDS = tuple(k for k in FaultKind
+                           if k is not FaultKind.CLOUD_OUTAGE)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -99,7 +112,7 @@ class FaultSchedule:
     @classmethod
     def generate(cls, seed: int, n_events: int = 5, *,
                  horizon_s: float = 40.0, n_vms: int = 4,
-                 kinds: Tuple[FaultKind, ...] = tuple(FaultKind),
+                 kinds: Tuple[FaultKind, ...] = SINGLE_CLOUD_KINDS,
                  min_gap_s: float = 2.0) -> "FaultSchedule":
         rng = random.Random(seed)
         times = sorted(rng.uniform(1.0, horizon_s) for _ in range(n_events))
@@ -246,7 +259,8 @@ class ChaosController:
                  *, store: Optional[FaultyStore] = None,
                  hook: Optional[ChaosHealthHook] = None,
                  settle_timeout_s: float = 60.0,
-                 resume_stragglers: bool = True):
+                 resume_stragglers: bool = True,
+                 failover=None):
         self.service = service
         self.coord_id = coord_id
         self.backend = backend
@@ -255,6 +269,9 @@ class ChaosController:
         self.hook = hook
         self.settle_timeout_s = settle_timeout_s
         self.resume_stragglers = resume_stragglers
+        # optional replication.FailoverController: cloud_outage events then
+        # settle on the standby coming up instead of on primary recovery
+        self.failover = failover
         self.outcomes: List[FaultOutcome] = []
         self.sim_faults: List[Tuple[str, str, float]] = []
         backend.sim.on_fault(
@@ -324,6 +341,10 @@ class ChaosController:
             return "poison"
         raise ValueError("no ChaosHealthHook and app has no poison()")
 
+    def _inject_cloud_outage(self, ev: FaultEvent, coord) -> str:
+        self.backend.sim.cloud_outage()
+        return "outage"
+
     def _inject_host_slowdown(self, ev: FaultEvent, coord) -> str:
         vm = coord.vms[ev.vm_index % len(coord.vms)]
         self.backend.sim.degrade_host(vm.host.host_id, ev.slowdown)
@@ -353,6 +374,9 @@ class ChaosController:
         if ev.kind == FaultKind.STORAGE_PUT_FAULT:
             self._settle_put_fault(ev, coord, detail)
             return
+        if ev.kind == FaultKind.CLOUD_OUTAGE:
+            self._settle_cloud_outage(ev, coord, h0, t_inj, detail)
+            return
         if ev.kind == FaultKind.HOST_SLOWDOWN:
             ok_end = self._wait(
                 lambda: coord.state == CoordState.SUSPENDED)
@@ -366,6 +390,36 @@ class ChaosController:
         detection, restore, mttr = self._measure(ev, coord, h0, t_inj)
         self.outcomes.append(FaultOutcome(
             ev, ok=bool(ok_end), final_state=coord.state.value,
+            detection_s=detection, restore_s=restore, mttr_s=mttr,
+            recoveries=coord.recoveries, detail=detail))
+
+    def _settle_cloud_outage(self, ev: FaultEvent, coord, h0: int,
+                             t_inj: float, detail: str) -> None:
+        """A whole-cloud outage must fail conclusively on the home cloud
+        (recovery exhausts into ERROR — no capacity exists), and, when a
+        FailoverController is attached, end with the job RUNNING on a
+        standby cloud. MTTR is then injection → standby RUNNING."""
+        def primary_failed() -> bool:
+            return any(s == "ERROR" for _, s, *_ in coord.history[h0:])
+        ok = self._wait(primary_failed)
+        t_error = next((t for t, s, *_ in coord.history[h0:]
+                        if s == "ERROR"), None)
+        detection = (None if t_error is None
+                     else max(0.0, t_error - t_inj))
+        restore = mttr = None
+        if self.failover is not None:
+            got = self._wait(lambda: self.coord_id in self.failover.results)
+            res = self.failover.results.get(self.coord_id)
+            ok = ok and got and res is not None and res.ok
+            if res is not None and res.ok:
+                detail += f";standby={res.target};step={res.step}"
+                restore = res.restart_s
+                mttr = None if detection is None or res.mttr_s is None \
+                    else detection + res.mttr_s
+            elif res is not None:
+                detail += f";failover_error={res.error}"
+        self.outcomes.append(FaultOutcome(
+            ev, ok=bool(ok), final_state=coord.state.value,
             detection_s=detection, restore_s=restore, mttr_s=mttr,
             recoveries=coord.recoveries, detail=detail))
 

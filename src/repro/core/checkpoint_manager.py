@@ -164,6 +164,13 @@ class CheckpointManager:
         prefix, and deduped on ingest: chunks the destination already holds
         (e.g. from an earlier clone of the same lineage) are not re-uploaded.
 
+        Warm path: when the ImageReplicator (core/replication.py) has
+        already shipped a chunk to the destination side — it lives in the
+        destination store under the *source* prefix — the copy is sourced
+        from that local replica instead of crossing the inter-cloud link
+        again (counted in ``replica_hits``/``replica_bytes_local``).
+        Cross-cloud transfer then moves only the unreplicated delta.
+
         The per-chunk copies are independent, so they run on the parallel
         data plane's upload streams — cross-cloud transfer (the dominant
         term of migration, paper Table 3) overlaps source gets with
@@ -181,6 +188,21 @@ class CheckpointManager:
             if dst.exists(new_key):          # ingest dedup: count, skip the
                 dst.count_ingest_hit(c.nbytes)  # source read entirely
                 return
+            if dst is not src_store and dst.exists(c.key):
+                # warm migration: a replica of this chunk is already on
+                # the destination side — copy store-locally, not across
+                # the inter-cloud link. The replica may vanish between the
+                # exists check and the read (the replicator mirrors
+                # primary GC pruning concurrently); fall back to the
+                # cross-cloud source rather than failing the clone.
+                try:
+                    data = dst.get(c.key)
+                except (KeyError, FileNotFoundError):
+                    data = None
+                if data is not None:
+                    dst.count_replica_hit(c.nbytes)
+                    dst.put_if_absent(new_key, data)
+                    return
             dst.put_if_absent(new_key, src_store.get(c.key))
 
         unique = {c.key: c for li in man.leaves.values()

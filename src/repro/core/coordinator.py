@@ -92,12 +92,17 @@ class Coordinator:
     created_at: float = dataclasses.field(default_factory=time.time)
     metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
     recoveries: int = 0
+    # Failover targets restore from the *primary's* replicated prefix
+    # (core/replication.py): overriding the prefix lets a standby
+    # coordinator adopt an already-replicated image lineage with zero
+    # chunk copies, and continue appending to it after failover.
+    ckpt_prefix_override: Optional[str] = None
     lock: threading.RLock = dataclasses.field(default_factory=threading.RLock,
                                               repr=False)
 
     @property
     def ckpt_prefix(self) -> str:
-        return f"apps/{self.coord_id}"
+        return self.ckpt_prefix_override or f"apps/{self.coord_id}"
 
     def to_dict(self) -> Dict[str, Any]:
         return {
@@ -111,7 +116,24 @@ class Coordinator:
             "error": self.error,
             "recoveries": self.recoveries,
             "history": [(t, s) for t, s, *_ in self.history],
+            "ckpt_prefix": self.ckpt_prefix,
+            "policy": {
+                "period_s": self.asr.policy.period_s,
+                "codec": self.asr.policy.codec,
+                "keep_last": self.asr.policy.keep_last,
+                "keep_every": self.asr.policy.keep_every,
+                "store": self.asr.policy.store,
+            },
+            "metrics": {k: v for k, v in self.metrics.items()
+                        if isinstance(v, (int, float, str))},
         }
+
+
+def _unrehydratable_app() -> Any:
+    raise RuntimeError(
+        "coordinator was rehydrated from its persisted record and has no "
+        "live application factory (code is not persisted); assign "
+        "coord.asr.app_factory before restarting it")
 
 
 class CoordinatorDB:
@@ -119,13 +141,60 @@ class CoordinatorDB:
 
     The paper keeps it in memory (§6.5) and notes it "could be implemented
     relying on a NoSQL reliable distributed database" (§6.4) — persistence
-    to the reliable object store gives managers the same restartability.
+    to the reliable object store gives managers the same restartability:
+    ``load()`` is the read path, rehydrating records (sans live app/VMs)
+    from ``db/coordinators/*.json`` so a restarted service instance sees
+    its coordinators again and can restart them from their images.
     """
 
     def __init__(self, store: Optional[ObjectStore] = None):
         self._lock = threading.RLock()
         self._coords: Dict[str, Coordinator] = {}
         self._store = store
+
+    def load(self) -> List[Coordinator]:
+        """Rehydrate persisted coordinator records from the object store.
+
+        Live state (the Application instance, VM handles) is process-bound
+        and not persisted — rehydrated coordinators come back with
+        ``app=None`` / ``vms=[]`` and an ``app_factory`` placeholder that
+        raises until re-attached; their checkpoint images, step history
+        and state survive, so ``restart_from`` (after re-attaching a
+        factory) resumes them on a fresh cluster. Records already present
+        in memory are left untouched. Returns the rehydrated coordinators.
+        """
+        if self._store is None:
+            return []
+        loaded: List[Coordinator] = []
+        for key in self._store.list("db/coordinators/"):
+            d = json.loads(self._store.get(key).decode())
+            with self._lock:
+                if d["id"] in self._coords:
+                    continue
+            pol = d.get("policy", {})
+            asr = ASR(name=d["name"], n_vms=d["n_vms"], backend=d["backend"],
+                      app_factory=_unrehydratable_app,
+                      policy=CheckpointPolicy(
+                          period_s=pol.get("period_s", 0.0),
+                          codec=pol.get("codec", "raw"),
+                          keep_last=pol.get("keep_last", 3),
+                          keep_every=pol.get("keep_every", 0),
+                          store=pol.get("store", "default")),
+                      priority=d.get("priority", 0))
+            coord = Coordinator(
+                coord_id=d["id"], asr=asr,
+                state=CoordState(d["state"]),
+                history=[(t, s) for t, s in d.get("history", [])],
+                error=d.get("error"),
+                recoveries=d.get("recoveries", 0),
+                metrics=dict(d.get("metrics", {})))
+            prefix = d.get("ckpt_prefix")
+            if prefix and prefix != f"apps/{coord.coord_id}":
+                coord.ckpt_prefix_override = prefix
+            with self._lock:
+                self._coords[coord.coord_id] = coord
+            loaded.append(coord)
+        return loaded
 
     def create(self, asr: ASR) -> Coordinator:
         coord = Coordinator(coord_id=fresh_id("coord"), asr=asr)

@@ -26,6 +26,18 @@ on the destination service's parallel data plane (DataPlaneConfig
 upload_workers concurrent chunk copies), so the ``transfer_s`` term of
 MigrationResult — the dominant cost of cross-cloud migration in the paper's
 Table 3 — scales with stream count on latency/bandwidth-bound links.
+
+When an ImageReplicator (core/replication.py) has been keeping the
+destination cloud warm, migration upgrades further: upload_image sources
+every already-replicated chunk from the destination-side replica, so the
+inter-cloud link carries only the unreplicated delta and ``transfer_s``
+collapses (benchmarks/replication.py measures cold vs warm side by side).
+
+Failure containment: a clone/migrate that dies mid-flight (upload fault,
+destination never reaching RUNNING) must leave the *source untouched* and
+must not leak the half-created destination coordinator — the destination
+record is torn down before the error propagates, and ``migrate`` only
+terminates the source after the clone has fully succeeded.
 """
 from __future__ import annotations
 
@@ -74,26 +86,52 @@ def clone(src: CACSService, coord_id: str, dst: CACSService, *,
         n_vms=n_vms if n_vms is not None else src_coord.asr.n_vms)
     dst_coord = dst.db.create(new_asr)
 
-    # 2. POST .../checkpoints — upload the image (n chunk objects).
-    src_store = src.ckpt.store(src_coord.asr.policy.store)
-    dst.upload_checkpoint(dst_coord.coord_id, src_store,
-                          src_coord.ckpt_prefix, step)
-    t2 = time.monotonic()
+    try:
+        # 2. POST .../checkpoints — upload the image (n chunk objects).
+        src_store = src.ckpt.store(src_coord.asr.policy.store)
+        dst.upload_checkpoint(dst_coord.coord_id, src_store,
+                              src_coord.ckpt_prefix, step)
+        t2 = time.monotonic()
 
-    # 3. POST .../checkpoints/:id — restart on the destination cloud.
-    #    Passive recovery allocates + provisions the new virtual cluster.
-    dst.restart_from(dst_coord.coord_id, step)
-    dst.wait_for_state(dst_coord.coord_id, CoordState.RUNNING, timeout=60)
-    t3 = time.monotonic()
+        # 3. POST .../checkpoints/:id — restart on the destination cloud.
+        #    Passive recovery allocates + provisions the new virtual cluster.
+        dst.restart_from(dst_coord.coord_id, step)
+        dst.wait_for_state(dst_coord.coord_id, CoordState.RUNNING, timeout=60)
+        t3 = time.monotonic()
+    except BaseException:
+        # The clone failed mid-flight. The source keeps running untouched
+        # (its image is still committed in its own store); the half-created
+        # destination coordinator — record, any uploaded chunks, any VMs a
+        # partial restart claimed — must not leak.
+        _cleanup_failed_clone(dst, dst_coord.coord_id)
+        raise
 
     return MigrationResult(
         src_id=coord_id, dst_id=dst_coord.coord_id, step=step,
         checkpoint_s=t1 - t0, transfer_s=t2 - t1, restart_s=t3 - t2)
 
 
+def _cleanup_failed_clone(dst: CACSService, dst_id: str) -> None:
+    """Tear down the destination side of a failed clone, never masking the
+    original error (cleanup failures are swallowed: the record may already
+    be gone, or the destination store may itself be the faulty party)."""
+    try:
+        dst.delete_coordinator(dst_id)
+    except Exception:                          # noqa: BLE001
+        try:
+            dst.db.remove(dst_id)              # at least drop the record
+        except Exception:                      # noqa: BLE001
+            pass
+
+
 def migrate(src: CACSService, coord_id: str, dst: CACSService, *,
             backend: str, n_vms: Optional[int] = None) -> MigrationResult:
-    """Migration = clone + terminate on the source cloud (paper §5.3)."""
+    """Migration = clone + terminate on the source cloud (paper §5.3).
+
+    The source is only terminated after the destination is verifiably
+    RUNNING — a clone that fails at any point propagates its error with
+    the source still running and the destination cleaned up, so a failed
+    migration never strands the job."""
     result = clone(src, coord_id, dst, backend=backend, n_vms=n_vms)
     src.delete_coordinator(coord_id)
     return result

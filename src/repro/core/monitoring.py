@@ -117,6 +117,12 @@ class MonitoringManager:
         self.heartbeats = 0
         self.native_notifications = 0
         self.partition_fallbacks = 0
+        # whole-fleet outage telemetry: polls where EVERY VM of an app was
+        # unreachable at once. A single VM failing is the paper's §6.3
+        # case 1; the entire fleet going dark at once is the cloud-outage
+        # signature that cross-cloud failover (core/replication.py) keys on.
+        self.fleet_unreachable_polls = 0
+        self._fleet_down: set = set()
 
     # ---- registration --------------------------------------------------
     def watch(self, coord_id: str, vms: Sequence[VMHandle],
@@ -127,6 +133,7 @@ class MonitoringManager:
                 "vms": list(vms), "hook": health_hook,
                 "native": native_notifications, "unreachable_polls": 0,
             }
+            self._fleet_down.discard(coord_id)
 
     def unwatch(self, coord_id: str) -> None:
         with self._lock:
@@ -166,6 +173,13 @@ class MonitoringManager:
         if report is None:
             return
         if report.unreachable:
+            if len(report.unreachable) == len(info["vms"]):
+                # the whole fleet is dark at once — record the outage
+                # signature (sticky until the next successful watch) for
+                # the failover controller to corroborate against
+                with self._lock:
+                    self.fleet_unreachable_polls += 1
+                    self._fleet_down.add(coord_id)
             if not info["native"]:
                 self._recover_cb(coord_id, "vm_failure")
             elif self._bump_unreachable(coord_id) >= self.native_grace_polls:
@@ -179,6 +193,8 @@ class MonitoringManager:
                 self._recover_cb(coord_id, "vm_failure")
             return
         self._reset_unreachable(coord_id)
+        with self._lock:
+            self._fleet_down.discard(coord_id)
         if report.unhealthy:
             self._recover_cb(coord_id, "app_failure")
         elif report.stragglers:
@@ -197,6 +213,13 @@ class MonitoringManager:
             info = self._watched.get(coord_id)
             if info is not None:
                 info["unreachable_polls"] = 0
+
+    def fleet_unreachable(self, coord_id: str) -> bool:
+        """True while the last probes saw *every* VM of this app dark (the
+        flag is sticky across unwatch so a post-recovery-failure failover
+        decision can still read it; re-watching clears it)."""
+        with self._lock:
+            return coord_id in self._fleet_down
 
     def check_once(self, coord_id: str) -> Optional[HealthReport]:
         with self._lock:

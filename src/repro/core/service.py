@@ -50,6 +50,12 @@ class CACSService:
                  ckpt_plane: Optional[DataPlaneConfig] = None):
         stores = stores or {"default": InMemoryStore()}
         self.db = CoordinatorDB(db_store)
+        if db_store is not None:
+            # restartability (paper §6.4): a service instance given a
+            # persistent db store rehydrates its coordinator records (sans
+            # live app/VMs) — their images and step history are intact, so
+            # restart_from resumes them once an app factory is re-attached
+            self.db.load()
         self.cloud = CloudManager(backends)
         self.provision = ProvisionManager()
         # service-wide checkpoint data-plane parallelism (swap-out, periodic
@@ -58,6 +64,9 @@ class CACSService:
         self.ckpt = CheckpointManager(stores, plane=ckpt_plane)
         self.apps = AppManager(self.db, self.cloud, self.provision,
                                self.ckpt, workers=workers)
+        # optional cross-cloud replication (core/replication.py); attached
+        # via attach_replicator so standby wiring stays explicit
+        self.replicator = None
         # route native failure notifications (Snooze path, §6.1)
         for backend in backends.values():
             if backend.supports_failure_notifications:
@@ -107,6 +116,19 @@ class CACSService:
     def delete_checkpoint(self, coord_id: str, step: int) -> None:
         self.ckpt.delete_image(self.db.get(coord_id), step)
 
+    # ---- replication (core/replication.py) ------------------------------
+    def attach_replicator(self, replicator) -> None:
+        """Register this service's ImageReplicator so replication state is
+        queryable through the facade and shut down with the service."""
+        self.replicator = replicator
+
+    def replication_stats(self, coord_id: str) -> Dict[str, Any]:
+        """Per-target replication lag / RPO / copy counters for one app
+        ({} when no replicator is attached or the app is not replicated)."""
+        if self.replicator is None:
+            return {}
+        return self.replicator.replication_stats(coord_id)
+
     # ---- convenience -----------------------------------------------------
     def wait_for_state(self, coord_id: str, state: CoordState,
                        timeout: float = 30.0) -> Coordinator:
@@ -124,6 +146,8 @@ class CACSService:
             f"(now {self.db.get(coord_id).state.value})")
 
     def shutdown(self) -> None:
+        if self.replicator is not None:
+            self.replicator.stop()
         self.apps.stop_daemons()
         for coord in list(self.db.list()):
             try:

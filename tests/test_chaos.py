@@ -90,7 +90,10 @@ def test_storyline_all_fault_classes_recover():
     assert res.all_ok, [o for o in res.outcomes if not o.ok]
     assert res.final_state == "RUNNING"
     kinds = {o.event.kind for o in res.outcomes}
-    assert kinds == set(FaultKind)
+    # every single-cloud fault class; CLOUD_OUTAGE needs a standby cloud
+    # (covered by tests/test_replication.py) and is excluded by design
+    from repro.core.chaos import SINGLE_CLOUD_KINDS
+    assert kinds == set(SINGLE_CLOUD_KINDS)
 
 
 # ---------------------------------------------------------------------------

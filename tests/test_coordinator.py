@@ -70,3 +70,44 @@ def test_db_persistence():
     assert b"PROVISIONING" in store.get(keys[0])
     db.remove(c.coord_id)
     assert not store.list("db/coordinators/")
+
+
+def test_db_load_rehydrates_records():
+    """The read path of the persistence story (§6.4): a fresh DB over the
+    same store sees every record — state, history, policy — sans the
+    process-bound app/VMs, and raises helpfully if the app is started
+    without re-attaching a factory."""
+    import dataclasses
+
+    from repro.core.coordinator import CheckpointPolicy
+
+    store = InMemoryStore()
+    db = CoordinatorDB(store)
+    asr = dataclasses.replace(
+        _asr(), policy=CheckpointPolicy(period_s=0.5, codec="zlib",
+                                        keep_last=7, store="default"))
+    a = db.create(asr)
+    db.transition(a, CoordState.PROVISIONING)
+    db.transition(a, CoordState.READY)
+    b = db.create(_asr())
+    a.metrics["last_recovery_s"] = 1.25
+    db.transition(a, CoordState.RUNNING)      # re-persists a with metrics
+
+    db2 = CoordinatorDB(store)
+    loaded = {c.coord_id: c for c in db2.load()}
+    assert set(loaded) == {a.coord_id, b.coord_id}
+    ra = loaded[a.coord_id]
+    assert ra.state == CoordState.RUNNING
+    assert [s for _, s in ra.history] == ["CREATING", "PROVISIONING",
+                                          "READY", "RUNNING"]
+    assert ra.vms == [] and ra.app is None
+    assert ra.asr.policy.codec == "zlib" and ra.asr.policy.keep_last == 7
+    assert ra.asr.policy.period_s == 0.5
+    assert ra.metrics["last_recovery_s"] == 1.25
+    assert ra.ckpt_prefix == a.ckpt_prefix
+    with pytest.raises(RuntimeError, match="app_factory"):
+        ra.asr.app_factory()
+    # idempotent: records already in memory are not re-loaded
+    assert db2.load() == []
+    # a memory-only DB has nothing to load
+    assert CoordinatorDB().load() == []

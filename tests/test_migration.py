@@ -5,7 +5,7 @@ import time
 import numpy as np
 import pytest
 
-from repro.ckpt import InMemoryStore
+from repro.ckpt import ChaosStorageError, FaultyStore, InMemoryStore
 from repro.clusters import LocalBackend, OpenStackBackend, SnoozeBackend
 from repro.configs import get_config, reduced
 from repro.core import (ASR, CACSService, CheckpointPolicy, CoordState,
@@ -73,6 +73,75 @@ def test_cloudify_desktop_to_cloud():
     finally:
         desktop.shutdown()
         cloud.shutdown()
+
+
+def test_clone_explicit_earlier_step(two_clouds):
+    """fresh_checkpoint=False with an explicit committed step clones from
+    exactly that image, not the newest one."""
+    src, dst = two_clouds
+    asr = ASR(name="sim", n_vms=2, backend="snooze",
+              app_factory=lambda: SimulatedApp(iter_time_s=0.3,
+                                               state_mb=0.02),
+              policy=CheckpointPolicy(period_s=0, keep_last=3))
+    cid = src.submit(asr)
+    src.wait_for_state(cid, CoordState.RUNNING, 30)
+    time.sleep(0.3)
+    s1 = src.trigger_checkpoint(cid)
+    it_s1 = src.ckpt.load(src.db.get(cid), s1)["iteration"]
+    time.sleep(0.3)
+    src.trigger_checkpoint(cid)               # a newer image exists
+    res = clone(src, cid, dst, backend="openstack", step=s1,
+                fresh_checkpoint=False)
+    assert res.step == s1 and res.checkpoint_s < 0.05
+    c2 = dst.db.get(res.dst_id)
+    assert c2.state == CoordState.RUNNING
+    # restored from s1: cannot have started beyond the newer image
+    assert c2.app.restarts == 1
+    assert c2.app.iteration >= it_s1
+
+
+def test_clone_missing_explicit_step_raises_cleanly(two_clouds):
+    """An explicit-but-missing step must raise (never restart from
+    garbage) and must not leak a half-created destination record."""
+    src, dst = two_clouds
+    cid = _submit_sim(src, "snooze")
+    src.trigger_checkpoint(cid)
+    with pytest.raises(FileNotFoundError):
+        clone(src, cid, dst, backend="openstack", step=999,
+              fresh_checkpoint=False)
+    assert src.db.get(cid).state == CoordState.RUNNING
+    assert not dst.list_coordinators(), "failed clone leaked the dst record"
+
+
+def test_failed_migration_leaves_source_running_and_no_dst_leak():
+    """Regression (FaultyStore): if the transfer dies mid-upload, the
+    source must be untouched and the half-created destination coordinator
+    cleaned up — migrate only terminates the source after success."""
+    faulty = FaultyStore(InMemoryStore())
+    src = CACSService({"snooze": SnoozeBackend(8)},
+                      {"default": InMemoryStore()})
+    dst = CACSService({"openstack": OpenStackBackend(8)},
+                      {"default": faulty})
+    try:
+        cid = _submit_sim(src, "snooze")
+        time.sleep(0.2)
+        faulty.arm_put_errors(1)              # first chunk put dies
+        with pytest.raises((ChaosStorageError, IOError)):
+            migrate(src, cid, dst, backend="openstack")
+        # source untouched: still RUNNING, record intact, images intact
+        c = src.db.get(cid)
+        assert c.state == CoordState.RUNNING
+        assert src.list_checkpoints(cid)
+        # destination fully cleaned: no record, no committed images
+        assert not dst.list_coordinators()
+        faulty.disarm()
+        # and the same migration succeeds once the store heals
+        res = migrate(src, cid, dst, backend="openstack")
+        assert dst.db.get(res.dst_id).state == CoordState.RUNNING
+        assert all(ci["id"] != cid for ci in src.list_coordinators())
+    finally:
+        src.shutdown()
+        dst.shutdown()
 
 
 def test_migrated_training_job_is_bit_exact(two_clouds):

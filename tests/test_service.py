@@ -145,6 +145,46 @@ def test_straggler_triggers_proactive_suspend(snooze_svc):
     assert svc.list_checkpoints(cid)
 
 
+def test_service_restart_rehydrates_and_resumes():
+    """§6.4 restartability end-to-end: a service instance dies (no clean
+    shutdown); a fresh instance over the same stores rehydrates the
+    coordinator record via CoordinatorDB.load and — after the caller
+    re-attaches an app factory — restarts the job from its images."""
+    from repro.ckpt import InMemoryStore as _Store
+    ckpt_store, db_store = _Store(), _Store()
+    svc1 = CACSService({"snooze": SnoozeBackend(n_hosts=8)},
+                       {"default": ckpt_store}, db_store=db_store)
+    asr = ASR(name="app", n_vms=2, backend="snooze",
+              app_factory=lambda: SimulatedApp(iter_time_s=0.5,
+                                               state_mb=0.05),
+              policy=CheckpointPolicy(period_s=0, keep_last=3))
+    cid = svc1.submit(asr)
+    svc1.wait_for_state(cid, CoordState.RUNNING, timeout=30)
+    time.sleep(0.2)
+    step = svc1.trigger_checkpoint(cid)
+    it_saved = svc1.ckpt.load(svc1.db.get(cid), step)["iteration"]
+    # simulate a service-instance crash: daemons stop, no terminate — the
+    # record stays in the db store and the images in the ckpt store
+    svc1.apps.stop_daemons()
+
+    svc2 = CACSService({"snooze": SnoozeBackend(n_hosts=8)},
+                       {"default": ckpt_store}, db_store=db_store)
+    try:
+        coord = svc2.db.get(cid)              # rehydrated on start
+        assert coord.state == CoordState.RUNNING   # last persisted state
+        assert coord.vms == [] and coord.app is None
+        assert svc2.list_checkpoints(cid) == [step]
+        coord.asr.app_factory = lambda: SimulatedApp(iter_time_s=0.5,
+                                                     state_mb=0.05)
+        svc2.restart_from(cid, step)
+        c = svc2.wait_for_state(cid, CoordState.RUNNING, timeout=30)
+        assert c.app.iteration >= it_saved    # resumed from the image
+        assert len(c.vms) == 2
+    finally:
+        svc2.shutdown()
+        svc1.provision.close()
+
+
 def test_restart_from_earlier_image(snooze_svc):
     svc, _ = snooze_svc
     cid = _submit(svc, "snooze", period=0.0)
