@@ -4,12 +4,13 @@
 #   make bench-smoke     fast benchmark subset proving the measurement paths
 #   make chaos-smoke     seeded fault-recovery scenario sweep (MTTR per class)
 #   make failover-smoke  seeded cross-cloud outage -> standby failover
+#   make sched-smoke     seeded over-subscription scenario + property suite
 #   make docs-lint       sanity-check docs: files exist, internal refs resolve
 
 PY      ?= python
 PYPATH  := src
 
-.PHONY: test bench-smoke chaos-smoke failover-smoke docs-lint
+.PHONY: test bench-smoke chaos-smoke failover-smoke sched-smoke docs-lint
 
 test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
@@ -22,6 +23,11 @@ chaos-smoke:
 
 failover-smoke:
 	FAILOVER_TRIALS=1 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only replication
+
+sched-smoke:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only oversubscription
+	SCHED_PROP_EXAMPLES=3 PYTHONPATH=$(PYPATH) $(PY) -m pytest -q \
+		tests/test_scheduler_properties.py tests/test_scheduler_chaos.py
 
 docs-lint:
 	$(PY) scripts/docs_lint.py

@@ -20,7 +20,8 @@ import time
 import traceback
 
 ALL = ("fig3", "table2", "table2incr", "fig4", "fig5", "fig6",
-       "ckpt_path", "pplane", "fault_recovery", "replication")
+       "ckpt_path", "pplane", "fault_recovery", "replication",
+       "oversubscription")
 
 
 def main() -> None:
@@ -34,8 +35,8 @@ def main() -> None:
 
     from benchmarks import (ckpt_path, fault_recovery, fig3_scalability,
                             fig4_service_load, fig5_migration, fig6_backends,
-                            parallel_plane, replication, table2_image_size,
-                            table2_incremental)
+                            oversubscription, parallel_plane, replication,
+                            table2_image_size, table2_incremental)
     from benchmarks.common import CSV_ROWS
 
     modules = {
@@ -49,6 +50,7 @@ def main() -> None:
         "pplane": parallel_plane,
         "fault_recovery": fault_recovery,
         "replication": replication,
+        "oversubscription": oversubscription,
     }
     print("bench,param,metric,value")
     failures = 0

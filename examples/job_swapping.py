@@ -1,49 +1,75 @@
-"""Job swapping in an over-subscribed cloud (paper use case 2):
-low-priority jobs are checkpointed to stable storage when a high-priority
-job needs their VMs, and resume automatically when it finishes.
+"""Job swapping in an over-subscribed, *cloud-spanning* deployment
+(paper use case 2): low-priority jobs are checkpointed to stable storage
+when a high-priority job needs their VMs — and, when their images are
+replicated to a standby cloud, they resume THERE with zero chunk
+re-uploads instead of waiting for home capacity.
 
     PYTHONPATH=src python examples/job_swapping.py
 """
 import time
 
 from repro.ckpt import InMemoryStore
-from repro.clusters import SnoozeBackend
+from repro.clusters import OpenStackBackend, SnoozeBackend
 from repro.core import (ASR, CACSService, CheckpointPolicy, CoordState,
-                        PriorityScheduler, SimulatedApp)
+                        GlobalScheduler, ImageReplicator, ReplicationPolicy,
+                        SimulatedApp, StandbyTarget)
 
 
 def state_of(svc, cids):
-    return {svc.db.get(c).asr.name: svc.db.get(c).state.value for c in cids}
+    return {svc.db.get(c).asr.name:
+            f"{svc.db.get(c).state.value}@{svc.db.get(c).asr.backend}"
+            for c in cids}
 
 
 def main() -> None:
-    backend = SnoozeBackend(n_hosts=8)
-    svc = CACSService({"snooze": backend}, {"default": InMemoryStore()})
-    sched = PriorityScheduler(svc, "snooze")
+    snooze = SnoozeBackend(n_hosts=8)
+    openstack = OpenStackBackend(n_hosts=4)
+    store_a, store_b = InMemoryStore(), InMemoryStore()
+    svc = CACSService({"snooze": snooze, "openstack": openstack},
+                      {"default": store_a, "standby": store_b})
+    replicator = ImageReplicator(svc)
+    replicator.add_target(StandbyTarget("openstack", store=store_b,
+                                        backend="openstack"))
+    svc.attach_replicator(replicator)
+    sched = GlobalScheduler(svc, cloud_stores={"snooze": "default",
+                                               "openstack": "standby"})
+    svc.attach_scheduler(sched)
     sched.start()
+    replicator.start()
 
-    def make_asr(name, n_vms, priority):
+    def make_asr(name, n_vms, priority, **kw):
         return ASR(name=name, n_vms=n_vms, backend="snooze",
                    priority=priority,
                    app_factory=lambda: SimulatedApp(iter_time_s=0.5,
                                                     state_mb=0.05),
-                   policy=CheckpointPolicy(period_s=0.5, keep_last=2))
+                   policy=CheckpointPolicy(period_s=0.5, keep_last=2), **kw)
 
     low = [sched.submit(make_asr(f"batch-{i}", 4, priority=1))
            for i in range(2)]
     for cid in low:
         svc.wait_for_state(cid, CoordState.RUNNING, timeout=60)
-    print(f"[swap] 2 low-priority jobs running; idle hosts: "
-          f"{backend.capacity()}")
+        replicator.watch(cid, ReplicationPolicy(targets=("openstack",)))
+        svc.trigger_checkpoint(cid)
+    print(f"[swap] 2 low-priority jobs running on snooze; idle hosts: "
+          f"snooze={snooze.capacity()} openstack={openstack.capacity()}")
 
-    print("[swap] submitting URGENT job needing 6 VMs ...")
-    hi = sched.submit(make_asr("urgent", 6, priority=10))
+    print("[swap] submitting URGENT job needing all 8 snooze VMs ...")
+    hi = sched.submit(make_asr("urgent", 8, priority=10,
+                               clouds=("snooze",)))
     svc.wait_for_state(hi, CoordState.RUNNING, timeout=60)
     print(f"[swap] states: {state_of(svc, low + [hi])} "
           f"(preemptions={sched.preemptions})")
-    assert any(svc.db.get(c).state == CoordState.SUSPENDED for c in low)
 
-    time.sleep(1.0)
+    # one victim backfills onto the standby cloud the moment its swap-out
+    # image finishes replicating (event-driven; the other waits for home)
+    deadline = time.monotonic() + 30
+    while time.monotonic() < deadline and sched.backfills < 1:
+        time.sleep(0.1)
+    print(f"[swap] after backfill: {state_of(svc, low)} "
+          f"(backfills={sched.backfills}, "
+          f"chunks re-uploaded={sched.backfill_reuploads})")
+    assert sched.backfills >= 1 and sched.backfill_reuploads == 0
+
     print("[swap] urgent job done — terminating it")
     svc.delete_coordinator(hi)
     deadline = time.monotonic() + 30
@@ -56,9 +82,13 @@ def main() -> None:
     for c in low:
         coord = svc.db.get(c)
         print(f"[swap]   {coord.asr.name}: iteration={coord.app.iteration} "
-              f"(progress preserved across the swap)")
+              f"on {coord.asr.backend} (progress preserved across swaps)")
         assert coord.app.iteration > 0
+    print("[swap] decision trace:")
+    for seq, op, name, backend, detail in sched.decision_trace():
+        print(f"[swap]   {seq:3d} {op:14s} {name:10s} {backend} {detail}")
     sched.stop()
+    replicator.stop()
     svc.shutdown()
 
 

@@ -67,6 +67,8 @@ class ClusterSim:
         self._lock = threading.RLock()
         self._failure_listeners: List[Callable[[VirtualHost], None]] = []
         self._fault_listeners: List[Callable[[str, str, float], None]] = []
+        self._capacity_listeners: List[Callable[[], None]] = []
+        self._allocation_listeners: List[Callable[[str, int], None]] = []
         # whole-cloud outage flag: every host partitioned AND allocation
         # denied until heal_outage() (the paper's cross-cloud failover
         # motivation — losing one entire cloud backend)
@@ -101,6 +103,11 @@ class ClusterSim:
             for h in got:
                 h.state = HostState.ALLOCATED
                 h.owner = owner
+        # the claim is visible (and notified) BEFORE the boot sleep: a
+        # scheduler holding a capacity reservation for this owner must
+        # drop it the instant the capacity counters reflect the claim,
+        # or the hosts would be double-counted for the whole boot
+        self._notify_allocation(owner, n)
         # boot cost: base + ceil(n / batch) * per_vm
         batches = -(-n // self.cost.alloc_batch_parallel)
         sim_sleep(self.cost.alloc_base_s + batches * self.cost.alloc_per_vm_s)
@@ -119,6 +126,7 @@ class ClusterSim:
                 # not the owner
                 if not self.in_outage:
                     h.partitioned = False
+        self._notify_capacity()
 
     # ---- failures ------------------------------------------------------
     def fail_host(self, host_id: str) -> None:
@@ -136,6 +144,7 @@ class ClusterSim:
             h.state = HostState.IDLE
             h.owner = None
         self._notify_fault("recover", host_id, 0.0)
+        self._notify_capacity()
 
     def degrade_host(self, host_id: str, slowdown: float) -> None:
         with self._lock:
@@ -156,6 +165,7 @@ class ClusterSim:
         with self._lock:
             self._hosts[host_id].partitioned = False
         self._notify_fault("partition", host_id, 0.0)
+        self._notify_capacity()
 
     def cloud_outage(self) -> None:
         """Whole-cloud outage: every host — allocated or idle — becomes
@@ -177,6 +187,7 @@ class ClusterSim:
             for h in self._hosts.values():
                 h.partitioned = False
         self._notify_fault("outage", "*", 0.0)
+        self._notify_capacity()
 
     def on_failure(self, cb: Callable[[VirtualHost], None]) -> None:
         self._failure_listeners.append(cb)
@@ -188,9 +199,31 @@ class ClusterSim:
         event trace; anything else (metrics, logging) can tap it too."""
         self._fault_listeners.append(cb)
 
+    def on_capacity(self, cb: Callable[[], None]) -> None:
+        """Subscribe to capacity-freed events: cb() fires after hosts
+        become allocatable again (release, host recovery, partition/outage
+        heal). The event-driven ``GlobalScheduler`` keys its scheduling
+        passes on this instead of polling the wall clock."""
+        self._capacity_listeners.append(cb)
+
+    def on_allocation(self, cb: Callable[[str, int], None]) -> None:
+        """Subscribe to allocation claims: ``cb(owner, n)`` fires the
+        moment n hosts are claimed for ``owner`` (before the boot cost is
+        paid). The scheduler releases its capacity reservation for that
+        owner here — the sim's own counters carry the claim from now on."""
+        self._allocation_listeners.append(cb)
+
     def _notify_fault(self, kind: str, host_id: str, value: float) -> None:
         for cb in list(self._fault_listeners):
             cb(kind, host_id, value)
+
+    def _notify_capacity(self) -> None:
+        for cb in list(self._capacity_listeners):
+            cb()
+
+    def _notify_allocation(self, owner: str, n: int) -> None:
+        for cb in list(self._allocation_listeners):
+            cb(owner, n)
 
     def is_reachable(self, host_id: str) -> bool:
         with self._lock:

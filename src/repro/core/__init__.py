@@ -3,7 +3,9 @@
 Public surface:
   * ``CACSService``       — REST-style facade (paper Table 1)
   * ``ASR``               — Application Submission Request (paper §5.1)
-  * ``PriorityScheduler`` — job swapping / over-subscription (use case 2)
+  * ``GlobalScheduler``   — cloud-spanning job swapping / over-subscription
+                            (use case 2): preemption, aging, cross-cloud
+                            backfill over replicated images
   * ``migration``         — clone / migrate / cloudify (paper §5.3, §7.3)
 """
 from repro.core.application import Application, AppContext, SimulatedApp
@@ -18,7 +20,8 @@ from repro.core.replication import (FailoverController, FailoverResult,
                                     FailoverScenarioResult, ImageReplicator,
                                     ReplicationPolicy, StandbyTarget,
                                     run_failover_scenario)
-from repro.core.scheduler import PriorityScheduler
+from repro.core.scheduler import (GlobalScheduler, JobSpec, PlacementWeights,
+                                  WorkloadTrace)
 from repro.core.service import CACSService
 
 __all__ = [
@@ -31,5 +34,6 @@ __all__ = [
     "FailoverController", "FailoverResult", "FailoverScenarioResult",
     "ImageReplicator", "ReplicationPolicy", "StandbyTarget",
     "run_failover_scenario",
-    "PriorityScheduler", "CACSService",
+    "GlobalScheduler", "JobSpec", "PlacementWeights", "WorkloadTrace",
+    "CACSService",
 ]

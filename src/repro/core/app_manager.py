@@ -69,6 +69,30 @@ class AppManager:
             fut.result()
         return coord
 
+    def enqueue(self, asr: ASR) -> Coordinator:
+        """Admit a job without starting it: the record is created and
+        parked in QUEUED (persisted — queued work survives a service
+        restart), holding no resources until a scheduler calls
+        ``start_queued`` (fresh bring-up) or ``restart_from`` (requeued
+        jobs that already hold images)."""
+        coord = self.db.create(asr)
+        self.db.transition(coord, CoordState.QUEUED, "queued")
+        return coord
+
+    def start_queued(self, coord_id: str, block: bool = True) -> Coordinator:
+        """Begin the bring-up of a QUEUED coordinator (allocate →
+        provision → start). Capacity races surface as an ERROR record
+        whose error names CapacityError; the scheduler requeues those."""
+        coord = self.db.get(coord_id)
+        with coord.lock:
+            if coord.state != CoordState.QUEUED:
+                raise RuntimeError(
+                    f"cannot start queued job in state {coord.state.value}")
+        fut = self.pool.submit(self._bringup, coord)
+        if block:
+            fut.result()
+        return coord
+
     def _provision_cost(self, backend_name: str):
         backend = self.cloud.backend(backend_name)
         return {"cost": backend.sim.cost} if isinstance(backend, SimBackend) \
@@ -325,7 +349,10 @@ class AppManager:
                 if coord.app is not None:      # rehydrated records
                     coord.app.stop()           # (CoordinatorDB.load) have
                                                # no live app to stop
-            elif coord.state in (CoordState.SUSPENDED, CoordState.ERROR):
+            elif coord.state in (CoordState.SUSPENDED, CoordState.ERROR,
+                                 CoordState.QUEUED):
+                # QUEUED here is a *requeued* job (dead cloud / capacity
+                # race) that already holds images — restart, don't rerun
                 self.db.transition(coord, CoordState.RESTARTING, "user")
             elif coord.state == CoordState.CREATING:
                 fresh_clone = True

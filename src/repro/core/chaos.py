@@ -32,7 +32,7 @@ Fault classes and what each one proves:
                          the monitor thread). Recovery: in-place restart.
   ``host_slowdown``      straggler. Monitor z-scores it; the app manager
                          proactively suspends to stable storage; the
-                         controller (or a PriorityScheduler) resumes it.
+                         controller (or the GlobalScheduler) resumes it.
   ``storage_put_fault``  transient store error mid-save. The COMMITTED
                          protocol must leave the previous image loadable
                          and the torn step invisible.
@@ -260,7 +260,7 @@ class ChaosController:
                  hook: Optional[ChaosHealthHook] = None,
                  settle_timeout_s: float = 60.0,
                  resume_stragglers: bool = True,
-                 failover=None):
+                 failover=None, scheduler=None):
         self.service = service
         self.coord_id = coord_id
         self.backend = backend
@@ -272,6 +272,11 @@ class ChaosController:
         # optional replication.FailoverController: cloud_outage events then
         # settle on the standby coming up instead of on primary recovery
         self.failover = failover
+        # optional GlobalScheduler: kicked after every injection, and
+        # cloud_outage then settles on the scheduler requeuing the job and
+        # backfilling it onto a surviving cloud (same coordinator record,
+        # unlike the FailoverController's standby-service restart)
+        self.scheduler = scheduler
         self.outcomes: List[FaultOutcome] = []
         self.sim_faults: List[Tuple[str, str, float]] = []
         backend.sim.on_fault(
@@ -315,6 +320,8 @@ class ChaosController:
                 ev, ok=False, final_state=coord.state.value,
                 detail=f"inject failed: {type(e).__name__}"))
             return
+        if self.scheduler is not None:
+            self.scheduler.kick("chaos")
         self._settle(ev, coord, h0, rec0, t_inj, detail)
 
     # ---- injectors (one per fault class) --------------------------------
@@ -407,7 +414,20 @@ class ChaosController:
         detection = (None if t_error is None
                      else max(0.0, t_error - t_inj))
         restore = mttr = None
-        if self.failover is not None:
+        if self.scheduler is not None and self.failover is None:
+            # scheduler-managed job: the GlobalScheduler requeues it off
+            # the dead cloud and backfills it onto a surviving one —
+            # settle on the SAME coordinator coming back up
+            got = self._wait(lambda: coord.state == CoordState.RUNNING)
+            ok = ok and got
+            if got:
+                detail += f";backfill={coord.asr.backend}"
+                t_up = next((t for t, s, *_ in reversed(coord.history)
+                             if s == "RUNNING"), None)
+                restore = (None if t_error is None or t_up is None
+                           else max(0.0, t_up - t_error))
+                mttr = None if t_up is None else max(0.0, t_up - t_inj)
+        elif self.failover is not None:
             got = self._wait(lambda: self.coord_id in self.failover.results)
             res = self.failover.results.get(self.coord_id)
             ok = ok and got and res is not None and res.ok

@@ -97,6 +97,22 @@ class CheckpointManager:
                     plane=self._plane_for(coord))
             return self._async[coord.coord_id]
 
+    def detach(self, coord_id: str) -> None:
+        """Forget the coordinator's cached async writer, draining any
+        in-flight save first. Required when a coordinator is *retargeted*
+        to a different store (cross-cloud backfill adopts the replicated
+        prefix on another cloud's store): the cached writer is bound to
+        the old store and would commit post-resume saves to the wrong
+        cloud."""
+        with self._lock:
+            ck = self._async.pop(coord_id, None)
+        if ck is not None:
+            # drain without raising: a failed in-flight save is already
+            # consumed by the suspend/recovery path; detaching only needs
+            # quiescence before the writer is rebound to the new store
+            ck.wait(raise_error=False)
+            ck.close()
+
     def wait(self, coord: Coordinator, strict: bool = True):
         """Join any in-flight async save. strict=False swallows a failed
         save (returning the exception): the recovery/terminate paths only

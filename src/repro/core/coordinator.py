@@ -21,6 +21,7 @@ from repro.clusters.simulator import fresh_id
 
 class CoordState(enum.Enum):
     CREATING = "CREATING"
+    QUEUED = "QUEUED"                # admitted but waiting for capacity
     PROVISIONING = "PROVISIONING"
     READY = "READY"
     RUNNING = "RUNNING"
@@ -33,8 +34,14 @@ class CoordState(enum.Enum):
 
 # Legal transitions (paper Fig 2 + swapping/recovery extensions).
 TRANSITIONS: Dict[CoordState, tuple] = {
-    CoordState.CREATING: (CoordState.PROVISIONING, CoordState.ERROR,
-                          CoordState.TERMINATING),
+    CoordState.CREATING: (CoordState.QUEUED, CoordState.PROVISIONING,
+                          CoordState.ERROR, CoordState.TERMINATING),
+    # QUEUED is a persisted record with no resources: the GlobalScheduler
+    # owns when its bring-up (-> PROVISIONING) or image restart
+    # (-> RESTARTING, for requeued jobs that already hold images) starts,
+    # so queued work survives a service restart (paper §6.4).
+    CoordState.QUEUED: (CoordState.PROVISIONING, CoordState.RESTARTING,
+                        CoordState.ERROR, CoordState.TERMINATING),
     CoordState.PROVISIONING: (CoordState.READY, CoordState.ERROR,
                               CoordState.TERMINATING),
     CoordState.READY: (CoordState.RUNNING, CoordState.ERROR,
@@ -49,7 +56,10 @@ TRANSITIONS: Dict[CoordState, tuple] = {
                             CoordState.ERROR, CoordState.TERMINATING),
     CoordState.TERMINATING: (CoordState.TERMINATED, CoordState.ERROR),
     CoordState.TERMINATED: (),
-    CoordState.ERROR: (CoordState.TERMINATING, CoordState.RESTARTING),
+    # ERROR -> QUEUED: the scheduler requeues a job whose whole cloud died
+    # (recovery exhausted at home); it waits for a warm standby or a heal.
+    CoordState.ERROR: (CoordState.TERMINATING, CoordState.RESTARTING,
+                       CoordState.QUEUED),
 }
 
 
@@ -76,6 +86,10 @@ class ASR:
     policy: CheckpointPolicy = dataclasses.field(
         default_factory=CheckpointPolicy)
     priority: int = 0                # higher preempts lower
+    # backends this job may run on (cloud-spanning placement / backfill
+    # stays inside the list); empty = any registered backend. ``backend``
+    # above is the *home* cloud — the placement scorer's affinity target.
+    clouds: tuple = ()
     provision_cmds: tuple = ()       # user-defined provisioning hooks
     health_hook: Optional[Callable[[], bool]] = None
 
@@ -113,6 +127,7 @@ class Coordinator:
             "n_vms": self.asr.n_vms,
             "vms": [vm.vm_id for vm in self.vms],
             "priority": self.asr.priority,
+            "clouds": list(self.asr.clouds),
             "error": self.error,
             "recoveries": self.recoveries,
             "history": [(t, s) for t, s, *_ in self.history],
@@ -180,7 +195,8 @@ class CoordinatorDB:
                           keep_last=pol.get("keep_last", 3),
                           keep_every=pol.get("keep_every", 0),
                           store=pol.get("store", "default")),
-                      priority=d.get("priority", 0))
+                      priority=d.get("priority", 0),
+                      clouds=tuple(d.get("clouds", ())))
             coord = Coordinator(
                 coord_id=d["id"], asr=asr,
                 state=CoordState(d["state"]),
@@ -228,6 +244,12 @@ class CoordinatorDB:
                     f"{coord.coord_id}: {coord.state.value} -> {new.value}")
             coord.state = new
             coord.history.append((time.time(), new.value, reason))
+        self._persist(coord)
+
+    def persist(self, coord: Coordinator) -> None:
+        """Re-write a coordinator's persisted record outside a transition —
+        for metadata that must survive a restart, like the scheduler's
+        queue-entry stamp (aging restarts from the persisted wait)."""
         self._persist(coord)
 
     def _persist(self, coord: Coordinator) -> None:

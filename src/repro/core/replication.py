@@ -145,6 +145,7 @@ class ImageReplicator:
         self._watched: Dict[str, ReplicationPolicy] = {}
         self._throttles: Dict[str, _Throttle] = {}
         self._pairs: Dict[Tuple[str, str], Dict[str, Any]] = {}
+        self._replicated_listeners: List[Any] = []
         self._lock = threading.RLock()
         self._sync_lock = threading.Lock()    # one sync pass at a time
         self._stop = threading.Event()
@@ -182,6 +183,14 @@ class ImageReplicator:
     def watched(self) -> List[str]:
         with self._lock:
             return list(self._watched)
+
+    def on_replicated(self, cb) -> None:
+        """Subscribe to replication completions: ``cb(coord_id, target,
+        step)`` fires after an image is fully COMMITTED on a standby.
+        The GlobalScheduler keys cross-cloud backfill warmth on this —
+        a job waiting for its replica becomes placeable the instant the
+        replica commits, event-driven instead of polled."""
+        self._replicated_listeners.append(cb)
 
     # ---- daemon --------------------------------------------------------
     def start(self) -> None:
@@ -302,6 +311,12 @@ class ImageReplicator:
         state["images_replicated"] += 1
         with self._lock:
             self.images_replicated += 1
+            listeners = list(self._replicated_listeners)
+        for cb in listeners:
+            try:
+                cb(coord.coord_id, target.name, step)
+            except Exception:              # noqa: BLE001
+                pass                       # a bad listener must not stall sync
 
     # ---- queries -------------------------------------------------------
     def _lag(self, src: ObjectStore, prefix: str,

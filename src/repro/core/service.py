@@ -67,6 +67,9 @@ class CACSService:
         # optional cross-cloud replication (core/replication.py); attached
         # via attach_replicator so standby wiring stays explicit
         self.replicator = None
+        # optional cloud-spanning scheduler (core/scheduler.py); attached
+        # via attach_scheduler so it is stopped with the service
+        self.scheduler = None
         # route native failure notifications (Snooze path, §6.1)
         for backend in backends.values():
             if backend.supports_failure_notifications:
@@ -129,6 +132,19 @@ class CACSService:
             return {}
         return self.replicator.replication_stats(coord_id)
 
+    # ---- scheduling (core/scheduler.py) ----------------------------------
+    def attach_scheduler(self, scheduler) -> None:
+        """Register this service's GlobalScheduler so it is shut down with
+        the service and queryable through the facade."""
+        self.scheduler = scheduler
+
+    def scheduler_stats(self) -> Dict[str, Any]:
+        """Queue depth / preemption / backfill counters of the attached
+        scheduler ({} when none is attached)."""
+        if self.scheduler is None:
+            return {}
+        return self.scheduler.stats()
+
     # ---- convenience -----------------------------------------------------
     def wait_for_state(self, coord_id: str, state: CoordState,
                        timeout: float = 30.0) -> Coordinator:
@@ -146,6 +162,8 @@ class CACSService:
             f"(now {self.db.get(coord_id).state.value})")
 
     def shutdown(self) -> None:
+        if self.scheduler is not None:
+            self.scheduler.stop()
         if self.replicator is not None:
             self.replicator.stop()
         self.apps.stop_daemons()

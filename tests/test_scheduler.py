@@ -1,29 +1,33 @@
-"""Priority scheduler: preemption (job swapping), queueing, resume order."""
+"""GlobalScheduler: preemption (job swapping), queueing, aging, queue
+persistence, cross-cloud backfill, and the lock/rollback invariants."""
 import time
 
 import pytest
 
 from repro.ckpt import InMemoryStore
-from repro.clusters import SnoozeBackend
+from repro.ckpt.storage import FaultyStore
+from repro.clusters import OpenStackBackend, SnoozeBackend
 from repro.core import (ASR, CACSService, CheckpointPolicy, CoordState,
-                        PriorityScheduler, SimulatedApp)
+                        GlobalScheduler, ImageReplicator, ReplicationPolicy,
+                        SimulatedApp, StandbyTarget)
 
 
 @pytest.fixture
 def env():
     backend = SnoozeBackend(n_hosts=8)
     svc = CACSService({"snooze": backend}, {"default": InMemoryStore()})
-    sched = PriorityScheduler(svc, "snooze")
+    sched = GlobalScheduler(svc)
+    svc.attach_scheduler(sched)
     yield svc, sched, backend
     sched.stop()
     svc.shutdown()
 
 
-def _asr(name, n_vms, priority):
-    return ASR(name=name, n_vms=n_vms, backend="snooze", priority=priority,
+def _asr(name, n_vms, priority, backend="snooze", **kw):
+    return ASR(name=name, n_vms=n_vms, backend=backend, priority=priority,
                app_factory=lambda: SimulatedApp(iter_time_s=0.5,
                                                 state_mb=0.01),
-               policy=CheckpointPolicy(period_s=0))
+               policy=CheckpointPolicy(period_s=0), **kw)
 
 
 def test_high_priority_preempts_low(env):
@@ -31,14 +35,13 @@ def test_high_priority_preempts_low(env):
     low = sched.submit(_asr("low", 6, priority=1))
     svc.wait_for_state(low, CoordState.RUNNING, 20)
     hi = sched.submit(_asr("hi", 6, priority=9))
-    assert hi is not None, "should preempt, not queue"
     svc.wait_for_state(hi, CoordState.RUNNING, 20)
     assert svc.db.get(low).state == CoordState.SUSPENDED
     assert sched.preemptions == 1
     # low resumes when hi completes
     svc.delete_coordinator(hi)
     sched.tick()
-    assert svc.db.get(low).state == CoordState.RUNNING
+    svc.wait_for_state(low, CoordState.RUNNING, 20)
     assert sched.resumes == 1
 
 
@@ -47,12 +50,14 @@ def test_equal_priority_queues_instead_of_preempting(env):
     a = sched.submit(_asr("a", 6, priority=5))
     svc.wait_for_state(a, CoordState.RUNNING, 20)
     b = sched.submit(_asr("b", 6, priority=5))
-    assert b is None, "equal priority must queue, not preempt"
+    assert svc.db.get(b).state == CoordState.QUEUED, \
+        "equal priority must queue, not preempt"
     assert sched.queue_depth == 1
     assert svc.db.get(a).state == CoordState.RUNNING
     svc.delete_coordinator(a)
     sched.tick()
     assert sched.queue_depth == 0
+    svc.wait_for_state(b, CoordState.RUNNING, 20)
 
 
 def test_no_preemption_when_it_would_not_fit(env):
@@ -61,7 +66,7 @@ def test_no_preemption_when_it_would_not_fit(env):
     svc.wait_for_state(a, CoordState.RUNNING, 20)
     # 5 idle; need 12: even preempting a (3) only frees 8 total
     b = sched.submit(_asr("b", 12, priority=9))
-    assert b is None
+    assert svc.db.get(b).state == CoordState.QUEUED
     assert svc.db.get(a).state == CoordState.RUNNING, \
         "must not preempt when the high-prio job still can't fit"
     assert sched.preemptions == 0
@@ -73,15 +78,188 @@ def test_background_loop_drains_queue(env):
     a = sched.submit(_asr("a", 8, priority=5))
     svc.wait_for_state(a, CoordState.RUNNING, 20)
     b = sched.submit(_asr("b", 4, priority=5))
-    assert b is None
+    assert svc.db.get(b).state == CoordState.QUEUED
     svc.delete_coordinator(a)
-    deadline = time.monotonic() + 20
-    while time.monotonic() < deadline:
-        running = [c for c in svc.db.list()
-                   if c.state == CoordState.RUNNING]
-        if sched.queue_depth == 0 and len(running) == 1:
-            break
-        time.sleep(0.05)
+    # event-driven: releasing a's hosts kicks the scheduler — no polling
+    svc.wait_for_state(b, CoordState.RUNNING, 20)
     assert sched.queue_depth == 0
-    running = [c for c in svc.db.list() if c.state == CoordState.RUNNING]
-    assert len(running) == 1 and running[0].asr.name == "b"
+
+
+def test_preemption_is_all_or_nothing(env, monkeypatch):
+    """Partial-preemption leak regression: when the Nth victim's swap-out
+    save fails (FaultyStore), the already-suspended victims must be
+    resumed, not stranded with their capacity gone."""
+    backend = SnoozeBackend(n_hosts=8)
+    store = FaultyStore(InMemoryStore())
+    svc = CACSService({"snooze": backend}, {"default": store})
+    sched = GlobalScheduler(svc)
+    try:
+        a = sched.submit(_asr("victim-a", 3, priority=1))
+        b = sched.submit(_asr("victim-b", 3, priority=2))
+        svc.wait_for_state(a, CoordState.RUNNING, 20)
+        svc.wait_for_state(b, CoordState.RUNNING, 20)
+
+        orig = svc.apps.suspend
+
+        def failing_suspend(coord_id, reason="user"):
+            if coord_id == b:          # arm right before the 2nd victim's
+                store.arm_put_errors(1)   # swap-out write
+            return orig(coord_id, reason)
+
+        monkeypatch.setattr(svc.apps, "suspend", failing_suspend)
+        hi = sched.submit(_asr("hi", 8, priority=9))
+        # the preemption aborted: victim-a was suspended (lowest priority
+        # first), victim-b's save failed, victim-a must be running again
+        assert sched.aborted_preemptions == 1
+        assert svc.db.get(a).state == CoordState.RUNNING
+        assert svc.db.get(b).state == CoordState.RUNNING
+        assert svc.db.get(hi).state == CoordState.QUEUED
+        assert any(t[1] == "preempt_abort" for t in sched.decision_trace())
+        # once the fault clears, the retry goes through end to end
+        store.disarm()
+        monkeypatch.setattr(svc.apps, "suspend", orig)
+        sched.tick()
+        svc.wait_for_state(hi, CoordState.RUNNING, 20)
+        assert svc.db.get(a).state == CoordState.SUSPENDED
+        assert svc.db.get(b).state == CoordState.SUSPENDED
+    finally:
+        sched.stop()
+        svc.shutdown()
+
+
+def test_blocking_calls_run_outside_scheduler_lock(env, monkeypatch):
+    """Every suspend/resume/start the scheduler issues must run with the
+    scheduler lock released (the PR 3 hold-a-lock-across-a-save hazard)."""
+    svc, sched, backend = env
+    seen = []
+    for name in ("suspend", "resume", "start_queued"):
+        orig = getattr(svc.apps, name)
+
+        def wrapper(*a, _orig=orig, _name=name, **kw):
+            seen.append((_name, sched.lock_held()))
+            return _orig(*a, **kw)
+
+        monkeypatch.setattr(svc.apps, name, wrapper)
+    low = sched.submit(_asr("low", 6, priority=1))
+    svc.wait_for_state(low, CoordState.RUNNING, 20)
+    hi = sched.submit(_asr("hi", 6, priority=9))
+    svc.wait_for_state(hi, CoordState.RUNNING, 20)
+    svc.delete_coordinator(hi)
+    sched.tick()
+    svc.wait_for_state(low, CoordState.RUNNING, 20)
+    ops = {name for name, _ in seen}
+    assert {"suspend", "resume", "start_queued"} <= ops
+    assert all(not held for _, held in seen), \
+        f"blocking call under the scheduler lock: {seen}"
+
+
+def test_aging_promotes_long_waiting_jobs(env):
+    """Anti-starvation: with aging enabled, a lower-priority job that has
+    waited longer outranks a younger higher-priority one."""
+    svc, _, backend = env
+
+    class FakeClock:
+        t = 0.0
+
+        def now(self):
+            return self.t
+
+    clock = FakeClock()
+    sched = GlobalScheduler(svc, clock=clock, aging_rate=1.0)
+    try:
+        blocker = sched.submit(_asr("blocker", 8, priority=9))
+        svc.wait_for_state(blocker, CoordState.RUNNING, 20)
+        x = sched.submit(_asr("x", 8, priority=5))      # queued at t=0
+        clock.t = 4.0
+        y = sched.submit(_asr("y", 8, priority=6))      # queued at t=4
+        clock.t = 8.0
+        # eff(x) = 5 + 8 = 13 > eff(y) = 6 + 4 = 10
+        svc.delete_coordinator(blocker)
+        sched.tick()
+        svc.wait_for_state(x, CoordState.RUNNING, 20)
+        assert svc.db.get(y).state == CoordState.QUEUED
+    finally:
+        sched.stop()
+
+
+def test_queue_persists_across_service_restart():
+    """Satellite: queued work survives a service crash — the QUEUED record
+    (with its queue stamp) rehydrates via CoordinatorDB.load and a fresh
+    scheduler adopts and places it."""
+    db_store = InMemoryStore()
+    backend1 = SnoozeBackend(n_hosts=4)
+    svc1 = CACSService({"snooze": backend1}, {"default": InMemoryStore()},
+                       db_store=db_store)
+    sched1 = GlobalScheduler(svc1)
+    blocker = sched1.submit(_asr("blocker", 4, priority=5))
+    svc1.wait_for_state(blocker, CoordState.RUNNING, 20)
+    queued = sched1.submit(_asr("waiter", 4, priority=3))
+    assert svc1.db.get(queued).state == CoordState.QUEUED
+    # crash: no clean shutdown — only the daemons die with the process
+    sched1.stop()
+    svc1.apps.stop_daemons()
+
+    svc2 = CACSService({"snooze": SnoozeBackend(n_hosts=4)},
+                       {"default": InMemoryStore()}, db_store=db_store)
+    try:
+        rec = svc2.db.get(queued)
+        assert rec.state == CoordState.QUEUED
+        assert "queued_at_v" in rec.metrics       # aging stamp persisted
+        for coord in svc2.db.list():              # code is not persisted:
+            coord.asr.app_factory = lambda: SimulatedApp(iter_time_s=0.5)
+        sched2 = GlobalScheduler(svc2)
+        sched2.tick()
+        svc2.wait_for_state(queued, CoordState.RUNNING, 20)
+        sched2.stop()
+    finally:
+        svc2.shutdown()
+        svc1.provision.close()
+
+
+def test_cross_cloud_backfill_zero_reuploads():
+    """Tentpole: a preempted job whose images are fully replicated on
+    another cloud resumes there through the prefix-adoption path with
+    zero chunk re-uploads, and its next save commits to the new store."""
+    a = SnoozeBackend(n_hosts=8)
+    b = OpenStackBackend(n_hosts=4)
+    store_a, store_b = InMemoryStore(), InMemoryStore()
+    svc = CACSService({"snooze": a, "openstack": b},
+                      {"default": store_a, "standby": store_b})
+    rep = ImageReplicator(svc)
+    rep.add_target(StandbyTarget("openstack", store=store_b,
+                                 backend="openstack"))
+    svc.attach_replicator(rep)
+    sched = GlobalScheduler(svc, cloud_stores={"snooze": "default",
+                                               "openstack": "standby"})
+    svc.attach_scheduler(sched)
+    sched.start()
+    rep.start()
+    try:
+        low = sched.submit(_asr("low", 4, priority=1))
+        svc.wait_for_state(low, CoordState.RUNNING, 20)
+        svc.trigger_checkpoint(low)
+        rep.watch(low, ReplicationPolicy(targets=("openstack",)))
+        hi = sched.submit(_asr("hi", 8, priority=9, clouds=("snooze",)))
+        svc.wait_for_state(hi, CoordState.RUNNING, 20)
+        # low: preempted -> swap-out image replicates -> backfill resumes
+        # it on openstack (the replicator's on_replicated kick, no polling)
+        deadline = time.monotonic() + 20
+        while time.monotonic() < deadline:
+            c = svc.db.get(low)
+            if c.state == CoordState.RUNNING and c.asr.backend == "openstack":
+                break
+            time.sleep(0.02)
+        c = svc.db.get(low)
+        assert (c.state, c.asr.backend) == (CoordState.RUNNING, "openstack")
+        assert sched.backfills == 1
+        assert sched.backfill_reuploads == 0
+        assert c.metrics["backfill_reuploads"] == 0
+        assert c.asr.policy.store == "standby"
+        # the post-backfill save continues the adopted lineage standby-side
+        from repro.ckpt.reader import list_steps
+        step = svc.trigger_checkpoint(low)
+        assert step in list_steps(store_b, c.ckpt_prefix)
+    finally:
+        sched.stop()
+        rep.stop()
+        svc.shutdown()

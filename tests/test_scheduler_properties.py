@@ -1,0 +1,175 @@
+"""Property-based invariant suite for the cloud-spanning GlobalScheduler.
+
+For random seeded workloads (priorities, sizes, arrival order, home
+clouds — drawn through ``WorkloadTrace.generate``) the scheduler must
+uphold, at quiescence:
+
+  (a) **capacity safety** — allocated VMs never exceed any cloud's
+      capacity, and every RUNNING job holds exactly the VMs it asked for;
+  (b) **priority work-conservation** — no job waits (QUEUED/SUSPENDED)
+      that could fit on an allowed cloud, either in free capacity or by
+      preempting strictly-lower-priority running work;
+  (c) **no starvation** — with aging enabled and capacity turning over,
+      every submitted job eventually reaches RUNNING or TERMINATED.
+
+Runs under real hypothesis when installed, else the seeded in-repo shim.
+``SCHED_PROP_EXAMPLES`` shrinks the example budget (CI smoke)."""
+import os
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:                        # bare env: seeded fallback
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.ckpt import InMemoryStore
+from repro.clusters import OpenStackBackend, SnoozeBackend
+from repro.core import (ASR, CACSService, CheckpointPolicy, CoordState,
+                        GlobalScheduler, SimulatedApp, WorkloadTrace)
+
+MAX_EXAMPLES = int(os.environ.get("SCHED_PROP_EXAMPLES", "6"))
+N_HOSTS = {"snooze": 5, "openstack": 4}
+
+
+def _build(aging_rate=0.0):
+    backends = {"snooze": SnoozeBackend(n_hosts=N_HOSTS["snooze"]),
+                "openstack": OpenStackBackend(n_hosts=N_HOSTS["openstack"])}
+    svc = CACSService(backends, {"default": InMemoryStore()})
+    sched = GlobalScheduler(svc, aging_rate=aging_rate)
+    svc.attach_scheduler(sched)
+    return svc, sched, backends
+
+
+def _asr(job):
+    return ASR(name=job.name, n_vms=job.n_vms, backend=job.backend,
+               priority=job.priority,
+               app_factory=lambda: SimulatedApp(iter_time_s=0.5,
+                                                state_mb=0.005),
+               policy=CheckpointPolicy(period_s=0))
+
+
+def _quiesce(sched, max_passes=400):
+    import time
+    for _ in range(max_passes):
+        if sched.tick() == 0 and sched.inflight_depth == 0:
+            return
+        time.sleep(0.01)       # placements complete on the background pool
+    raise AssertionError("scheduler did not quiesce (placement ping-pong?)")
+
+
+def _assert_capacity_safe(svc, backends):
+    for name, backend in backends.items():
+        running = [c for c in svc.db.list()
+                   if c.state == CoordState.RUNNING
+                   and c.asr.backend == name]
+        allocated = sum(len(c.vms) for c in running)
+        assert allocated <= backend.sim.n_hosts, \
+            f"{name}: {allocated} VMs allocated over {backend.sim.n_hosts}"
+        for c in running:
+            assert len(c.vms) == c.asr.n_vms, \
+                f"{c.asr.name} runs with {len(c.vms)}/{c.asr.n_vms} VMs"
+
+
+def _assert_no_schedulable_waiter(svc, sched, backends):
+    """Invariant (b): a waiting job fits nowhere — not in free capacity,
+    not by preempting strictly-lower-priority runners (the scheduler's
+    own placement condition, re-derived independently)."""
+    coords = svc.db.list()
+    for q in coords:
+        if q.state not in (CoordState.QUEUED, CoordState.SUSPENDED):
+            continue
+        eff = sched.effective_priority(q)
+        # no replication in this env: jobs holding images are home-bound
+        has_image = (q.state == CoordState.SUSPENDED
+                     or svc.ckpt.latest(q) is not None)
+        allowed = ([q.asr.backend] if has_image
+                   else [n for n in backends
+                         if not q.asr.clouds or n in q.asr.clouds])
+        for name in allowed:
+            free = backends[name].capacity()
+            assert free < q.asr.n_vms, \
+                f"{q.asr.name} waits while {name} has {free} free"
+            preemptable = sum(
+                len(c.vms) for c in coords
+                if c.state == CoordState.RUNNING and c.asr.backend == name
+                and sched.defense_priority(c) < eff)
+            assert free + preemptable < q.asr.n_vms, \
+                (f"{q.asr.name} (eff {eff}) waits though preempting "
+                 f"lower-priority work on {name} would fit it")
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_capacity_and_priority_invariants(seed):
+    trace = WorkloadTrace.generate(
+        seed, n_jobs=6, backends=("snooze", "openstack"), max_vms=4,
+        max_priority=9)
+    svc, sched, backends = _build()
+    try:
+        for job in trace.jobs:             # arrival order, synchronous
+            sched.submit(_asr(job))
+        _quiesce(sched)
+        _assert_capacity_safe(svc, backends)
+        _assert_no_schedulable_waiter(svc, sched, backends)
+    finally:
+        sched.stop()
+        svc.shutdown()
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_invariants_hold_under_capacity_turnover(seed):
+    """(a) + (b) must also hold at every quiescent point of a churning
+    system: jobs finish (terminate) in seeded order and free capacity."""
+    rng_order = WorkloadTrace.generate(seed + 1, n_jobs=5,
+                                       backends=("snooze", "openstack"),
+                                       max_vms=3)
+    svc, sched, backends = _build()
+    try:
+        for job in rng_order.jobs:
+            sched.submit(_asr(job))
+        for _ in range(12):
+            _quiesce(sched)
+            _assert_capacity_safe(svc, backends)
+            _assert_no_schedulable_waiter(svc, sched, backends)
+            running = sorted(
+                (c for c in svc.db.list()
+                 if c.state == CoordState.RUNNING),
+                key=lambda c: c.asr.name)
+            if not running:
+                break
+            svc.delete_coordinator(running[0].coord_id)   # one job finishes
+    finally:
+        sched.stop()
+        svc.shutdown()
+
+
+@settings(max_examples=MAX_EXAMPLES, deadline=None)
+@given(st.integers(min_value=0, max_value=10_000))
+def test_no_starvation_with_aging(seed):
+    """Invariant (c): with aging enabled and capacity turning over, every
+    submitted job eventually reaches RUNNING or TERMINATED — nothing
+    waits forever, whatever its priority."""
+    trace = WorkloadTrace.generate(
+        seed, n_jobs=6, backends=("snooze", "openstack"), max_vms=4,
+        max_priority=9)
+    svc, sched, backends = _build(aging_rate=5.0)
+    try:
+        import time
+        cids = {sched.submit(_asr(job)): job.name for job in trace.jobs}
+        ran = set()
+        for _ in range(400):
+            sched.tick()
+            time.sleep(0.01)
+            running = [cid for cid in cids
+                       if cid in {c.coord_id for c in svc.db.list()}
+                       and svc.db.get(cid).state == CoordState.RUNNING]
+            ran.update(running)
+            for cid in sorted(running):
+                svc.delete_coordinator(cid)   # finished: free its capacity
+            if ran == set(cids):
+                break
+        assert ran == set(cids), \
+            f"starved jobs: {[cids[c] for c in set(cids) - ran]}"
+    finally:
+        sched.stop()
+        svc.shutdown()
