@@ -5,12 +5,14 @@
 #   make chaos-smoke     seeded fault-recovery scenario sweep (MTTR per class)
 #   make failover-smoke  seeded cross-cloud outage -> standby failover
 #   make sched-smoke     seeded over-subscription scenario + property suite
+#   make bench-diff      fresh chaos+scheduler benches vs committed baselines
 #   make docs-lint       sanity-check docs: files exist, internal refs resolve
 
 PY      ?= python
 PYPATH  := src
 
-.PHONY: test bench-smoke chaos-smoke failover-smoke sched-smoke docs-lint
+.PHONY: test bench-smoke chaos-smoke failover-smoke sched-smoke bench-diff \
+	docs-lint
 
 test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
@@ -18,16 +20,22 @@ test:
 bench-smoke:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only table2,table2incr,ckpt_path,pplane
 
+# trials are cheap now that the chaos harness runs on the virtual clock
 chaos-smoke:
-	CHAOS_TRIALS=1 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only fault_recovery
+	CHAOS_TRIALS=3 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only fault_recovery
 
 failover-smoke:
 	FAILOVER_TRIALS=1 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only replication
 
 sched-smoke:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only oversubscription
-	SCHED_PROP_EXAMPLES=3 PYTHONPATH=$(PYPATH) $(PY) -m pytest -q \
+	SCHED_PROP_EXAMPLES=25 PYTHONPATH=$(PYPATH) $(PY) -m pytest -q \
 		tests/test_scheduler_properties.py tests/test_scheduler_chaos.py
+
+bench-diff:
+	CHAOS_TRIALS=2 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run \
+		--only fault_recovery,oversubscription --json-dir bench-results
+	$(PY) scripts/bench_diff.py --fresh bench-results
 
 docs-lint:
 	$(PY) scripts/docs_lint.py

@@ -13,10 +13,14 @@ seeded scenario measures:
     stable storage for stragglers);
   * ``mttr_s``      — end-to-end, injection → RUNNING again.
 
-Values are emitted in **virtual (paper-calibrated) seconds** — wall time
-divided by ``TIME_SCALE`` — so they compare directly with the paper's
-restart measurements. Storage-fault scenarios are pass/fail (the COMMITTED
-invariant), emitted as ``survived``.
+Values are emitted in **virtual (paper-calibrated) seconds** — native
+clock stamps divided by ``active_clock().scale`` — so they compare
+directly with the paper's restart measurements. Storage-fault scenarios
+are pass/fail (the COMMITTED invariant), emitted as ``survived``.
+
+The whole benchmark runs on the discrete-event ``SimClock``: every settle
+wait and fault-schedule offset advances virtual time instantly, so the
+wall cost is bounded by actual control-plane work, not by sleeps.
 
 Trials per cell default to 2 (CHAOS_TRIALS env overrides; CI smoke uses 1).
 """
@@ -26,8 +30,8 @@ import os
 
 from benchmarks.common import emit
 from repro.clusters import OpenStackBackend, SnoozeBackend
-from repro.clusters.simulator import TIME_SCALE
 from repro.core.chaos import FaultEvent, FaultKind, FaultSchedule, run_scenario
+from repro.sim import SimClock, active_clock, use_clock
 
 RECOVERY_FAULTS = (FaultKind.VM_CRASH, FaultKind.APP_FAILURE,
                    FaultKind.MONITOR_PARTITION, FaultKind.HOST_SLOWDOWN)
@@ -41,7 +45,17 @@ def _one_fault_schedule(seed: int, kind: FaultKind) -> FaultSchedule:
 
 
 def run() -> None:
+    clk = SimClock()
+    try:
+        with use_clock(clk):
+            _run_all()
+    finally:
+        clk.close()
+
+
+def _run_all() -> None:
     trials = int(os.environ.get("CHAOS_TRIALS", "2"))
+    scale = active_clock().scale
     for path, backend_cls in BACKENDS:
         for kind in RECOVERY_FAULTS:
             det, rst, mttr = [], [], []
@@ -51,9 +65,9 @@ def run() -> None:
                     backend_cls=backend_cls, n_vms=4, settle_timeout_s=60)
                 (o,) = res.outcomes
                 assert o.ok, (path, kind, o)
-                det.append(o.detection_s / TIME_SCALE)
-                rst.append(o.restore_s / TIME_SCALE)
-                mttr.append(o.mttr_s / TIME_SCALE)
+                det.append(o.detection_s / scale)
+                rst.append(o.restore_s / scale)
+                mttr.append(o.mttr_s / scale)
             p = f"path={path},fault={kind.value}"
             emit("fault_recovery", p, "detection_s", sum(det) / len(det))
             emit("fault_recovery", p, "restore_s", sum(rst) / len(rst))

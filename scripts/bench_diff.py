@@ -1,0 +1,102 @@
+#!/usr/bin/env python
+"""Diff fresh benchmark JSON output against committed baselines.
+
+Usage::
+
+    python scripts/bench_diff.py --fresh bench-results \
+        [--baselines benchmarks/baselines] [name ...]
+
+For every ``BENCH_<name>.json`` in the baseline directory (or the names
+given), the fresh run must:
+
+* produce exactly the same set of ``(param, metric)`` rows — a vanished
+  or newly appearing row means the benchmark's coverage silently changed;
+* match **exactly** on invariant metrics (replica-hit purity, commit-
+  protocol survival, trace-replay identity) — these are pass/fail
+  determinism guarantees, not measurements;
+* stay finite and non-negative on everything else — timing metrics drift
+  with machine load even on the virtual clock (thread interleaving), so
+  their values are tracked by the artifact trail, not gated here.
+
+Exit status is non-zero on any mismatch, so CI can gate on it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import sys
+from typing import Dict, Tuple
+
+# metrics whose values are deterministic invariants — compared exactly
+EXACT_METRICS = {
+    "chunks_reuploaded",
+    "survived",
+    "replay_identical",
+    "all_ok",
+}
+
+
+def _load(path: str) -> Dict[Tuple[str, str], float]:
+    with open(path) as f:
+        data = json.load(f)
+    return {(r["param"], r["metric"]): r["value"] for r in data["rows"]}
+
+
+def diff_one(name: str, base_dir: str, fresh_dir: str) -> int:
+    fname = f"BENCH_{name}.json"
+    base_path = os.path.join(base_dir, fname)
+    fresh_path = os.path.join(fresh_dir, fname)
+    if not os.path.exists(fresh_path):
+        print(f"FAIL {name}: fresh run produced no {fname}")
+        return 1
+    base, fresh = _load(base_path), _load(fresh_path)
+    errors = 0
+    missing = sorted(set(base) - set(fresh))
+    extra = sorted(set(fresh) - set(base))
+    for param, metric in missing:
+        print(f"FAIL {name}: row disappeared: {param},{metric}")
+        errors += 1
+    for param, metric in extra:
+        print(f"FAIL {name}: unexpected new row: {param},{metric} "
+              f"(regenerate the baseline if intentional)")
+        errors += 1
+    for key in sorted(set(base) & set(fresh)):
+        param, metric = key
+        bval, fval = base[key], fresh[key]
+        if metric in EXACT_METRICS:
+            if bval != fval:
+                print(f"FAIL {name}: {param},{metric} = {fval} "
+                      f"(baseline {bval}) — invariant metric drifted")
+                errors += 1
+        elif not math.isfinite(fval) or fval < 0:
+            print(f"FAIL {name}: {param},{metric} = {fval} not a sane value")
+            errors += 1
+    if not errors:
+        print(f"ok   {name}: {len(base)} rows match "
+              f"({sum(1 for _, m in base if m in EXACT_METRICS)} exact)")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baselines", default="benchmarks/baselines")
+    ap.add_argument("--fresh", required=True,
+                    help="directory holding the fresh BENCH_*.json files")
+    ap.add_argument("names", nargs="*",
+                    help="benchmark names to diff (default: every baseline)")
+    args = ap.parse_args()
+    names = args.names or sorted(
+        f[len("BENCH_"):-len(".json")]
+        for f in os.listdir(args.baselines)
+        if f.startswith("BENCH_") and f.endswith(".json"))
+    if not names:
+        print(f"no baselines found in {args.baselines}", file=sys.stderr)
+        sys.exit(2)
+    errors = sum(diff_one(n, args.baselines, args.fresh) for n in names)
+    sys.exit(1 if errors else 0)
+
+
+if __name__ == "__main__":
+    main()

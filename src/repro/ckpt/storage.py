@@ -22,6 +22,8 @@ import threading
 import time
 from typing import Dict, Iterable, List, Optional, Set
 
+from repro.sim.simtime import active_clock
+
 
 class ObjectStore:
     """Abstract flat key/value object store (S3-shaped).
@@ -173,15 +175,18 @@ class InMemoryStore(ObjectStore):
         self.bytes_out = 0
 
     def _cost(self, nbytes: int) -> None:
+        # paid through the installed clock: real sleeps in production,
+        # instant virtual advances under a SimClock (repro.sim)
+        clk = active_clock()
         if self.latency_s > 0:
-            time.sleep(self.latency_s)
+            clk.sleep(self.latency_s)
         if self.bandwidth_bps:
             t = nbytes / self.bandwidth_bps
             if self.shared_link:
                 with self._link_lock:
-                    time.sleep(t)
+                    clk.sleep(t)
             elif t > 0:
-                time.sleep(t)
+                clk.sleep(t)
 
     def put(self, key: str, data: bytes) -> None:
         self._cost(len(data))

@@ -1,26 +1,29 @@
 """Virtual cluster simulator: hosts, failures, and a calibrated cost model.
 
 The simulator stands in for the IaaS data plane (Grid'5000 in the paper).
-Costs are wall-clock sleeps scaled by ``TIME_SCALE`` so the paper's curves
-(Fig 3/4/6) reproduce shape-faithfully in seconds instead of minutes.
-Failure injection drives the fault-tolerance integration tests.
+Costs are paper-calibrated seconds paid through the installed Clock
+(repro.sim): under the default WallClock they are wall sleeps scaled by
+``TIME_SCALE`` so the paper's curves (Fig 3/4/6) reproduce shape-faithfully
+in seconds instead of minutes; under a SimClock they advance virtual time
+instantly.  Failure injection drives the fault-tolerance integration tests.
 """
 from __future__ import annotations
 
 import dataclasses
 import enum
 import threading
-import time
 import uuid
 from typing import Callable, Dict, List, Optional
 
-# Global time scale for simulated latencies (1.0 = paper-calibrated seconds).
-TIME_SCALE = 0.01
+# Canonical definition lives in repro.sim.simtime; re-exported here for
+# backward compatibility (chaos/benchmarks import it from this module).
+from repro.sim.simtime import TIME_SCALE, active_clock
 
 
 def sim_sleep(seconds: float) -> None:
+    """Pay a paper-calibrated cost through the installed clock."""
     if seconds > 0:
-        time.sleep(seconds * TIME_SCALE)
+        active_clock().paper_sleep(seconds)
 
 
 class HostState(enum.Enum):

@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import concurrent.futures as cf
 import threading
-import time
 import traceback
 from typing import Any, Dict, Optional
 
@@ -23,6 +22,7 @@ from repro.clusters.simulator import CapacityError
 from repro.core.application import AppContext
 from repro.core.checkpoint_manager import CheckpointManager
 from repro.core.cloud_manager import CloudManager
+from repro.sim.simtime import active_clock
 from repro.core.coordinator import (ASR, Coordinator, CoordinatorDB,
                                     CoordState, InvalidTransition)
 from repro.core.monitoring import MonitoringManager
@@ -139,8 +139,9 @@ class AppManager:
         hook = asr.health_hook or (lambda: coord.app.healthy())
         self.monitor.watch(coord.coord_id, coord.vms, hook, native)
         if asr.policy.period_s > 0:
+            clk = active_clock()
             self._next_ckpt[coord.coord_id] = (
-                time.monotonic() + asr.policy.period_s)
+                clk.now() + clk.from_wall(asr.policy.period_s))
         return True
 
     # ------------------------------------------------------------------
@@ -176,8 +177,9 @@ class AppManager:
         self.monitor.stop()
 
     def _ckpt_loop(self, tick_s: float) -> None:
-        while not self._ckpt_daemon_stop.wait(tick_s):
-            now = time.monotonic()
+        while not active_clock().wait(self._ckpt_daemon_stop, tick_s):
+            clk = active_clock()
+            now = clk.now()
             for coord_id, due in list(self._next_ckpt.items()):
                 if now < due:
                     continue
@@ -196,7 +198,7 @@ class AppManager:
                     # periodic daemon for every app — skip this period
                     pass
                 self._next_ckpt[coord_id] = (
-                    now + coord.asr.policy.period_s)
+                    now + clk.from_wall(coord.asr.policy.period_s))
 
     # ------------------------------------------------------------------
     # Recovery (paper §5.3 / §6.3)
@@ -279,7 +281,7 @@ class AppManager:
             self.db.transition(coord, CoordState.RESTARTING, kind)
         self.monitor.unwatch(coord_id)
         coord.recoveries += 1
-        t0 = time.monotonic()
+        t0 = active_clock().now()
         try:
             coord.app.stop()
             err = self.ckpt.wait(coord, strict=False)
@@ -306,7 +308,8 @@ class AppManager:
             if self._aborted(coord):
                 return
             if self._start_app(coord, state):
-                coord.metrics["last_recovery_s"] = time.monotonic() - t0
+                coord.metrics["last_recovery_s"] = (
+                    active_clock().now() - t0)
         except Exception as e:                     # noqa: BLE001
             coord.error = str(e)
             # Only flag ERROR while we still own the coordinator: if a
@@ -329,7 +332,7 @@ class AppManager:
             except Exception:                      # noqa: BLE001
                 if attempt >= self.recover_retries:
                     raise
-                time.sleep(self.retry_backoff_s * (attempt + 1))
+                active_clock().sleep(self.retry_backoff_s * (attempt + 1))
 
     def restart_from(self, coord_id: str, step: Optional[int] = None) -> None:
         """POST /coordinators/:id/checkpoints/:id — restart from an image.

@@ -48,11 +48,11 @@ from __future__ import annotations
 import dataclasses
 import enum
 import random
-import time
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.ckpt.storage import ChaosStorageError, FaultyStore, InMemoryStore
 from repro.clusters.simulator import TIME_SCALE
+from repro.sim.simtime import active_clock
 from repro.core.coordinator import ASR, CheckpointPolicy, CoordState
 
 
@@ -208,21 +208,26 @@ class ScenarioResult:
 
 
 class VirtualClock:
-    """Virtual time anchored to the wall clock: ``TIME_SCALE`` wall seconds
-    per virtual second, matching ``sim_sleep``'s compression — event
-    offsets in a schedule are paper-calibrated (virtual) seconds."""
+    """Paper-seconds view anchored at construction over the *installed*
+    clock (repro.sim).  Under the default WallClock this is ``TIME_SCALE``
+    wall seconds per virtual second, matching ``sim_sleep``'s compression
+    (unchanged historical behavior); under a SimClock the virtual axis is
+    already paper seconds, so sleeps jump instantly.  Event offsets in a
+    schedule are paper-calibrated (virtual) seconds either way."""
 
     def __init__(self, time_scale: Optional[float] = None):
-        self.scale = TIME_SCALE if time_scale is None else time_scale
-        self._t0 = time.monotonic()
+        self._clk = active_clock()
+        # native seconds of the underlying clock per virtual second
+        self.scale = self._clk.scale if time_scale is None else time_scale
+        self._t0 = self._clk.now()
 
     def now(self) -> float:
-        return (time.monotonic() - self._t0) / self.scale
+        return (self._clk.now() - self._t0) / self.scale
 
     def sleep_until(self, t_virtual: float) -> None:
         delta = t_virtual - self.now()
         if delta > 0:
-            time.sleep(delta * self.scale)
+            self._clk.sleep_until(self._clk.now() + delta * self.scale)
 
 
 class ChaosHealthHook:
@@ -295,11 +300,15 @@ class ChaosController:
         return self.service.db.get(self.coord_id)
 
     def _wait(self, pred, timeout: Optional[float] = None) -> bool:
-        deadline = time.monotonic() + (timeout or self.settle_timeout_s)
-        while time.monotonic() < deadline:
+        # settle polling rides the installed clock: the deadline elapses in
+        # virtual time under a SimClock (the old wall-clock loop was a
+        # leak that kept chaos runs pinned to real seconds)
+        clk = active_clock()
+        deadline = clk.now() + clk.from_wall(timeout or self.settle_timeout_s)
+        while clk.now() < deadline:
             if pred():
                 return True
-            time.sleep(0.002)
+            clk.sleep(0.002)
         return False
 
     def _apply(self, ev: FaultEvent) -> None:
@@ -311,7 +320,7 @@ class ChaosController:
             return
         h0 = len(coord.history)
         rec0 = coord.recoveries
-        t_inj = time.time()
+        t_inj = active_clock().timestamp()
         try:
             apply = getattr(self, f"_inject_{ev.kind.value}")
             detail = apply(ev, coord) or ""

@@ -10,13 +10,13 @@ import dataclasses
 import enum
 import json
 import threading
-import time
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.ckpt.plane import DataPlaneConfig
 from repro.ckpt.storage import ObjectStore
 from repro.clusters.base import VMHandle, VMTemplate
 from repro.clusters.simulator import fresh_id
+from repro.sim.simtime import active_clock
 
 
 class CoordState(enum.Enum):
@@ -103,7 +103,8 @@ class Coordinator:
     app: Any = None                          # live Application (not persisted)
     history: List[tuple] = dataclasses.field(default_factory=list)
     error: Optional[str] = None
-    created_at: float = dataclasses.field(default_factory=time.time)
+    created_at: float = dataclasses.field(
+        default_factory=lambda: active_clock().timestamp())
     metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
     recoveries: int = 0
     # Failover targets restore from the *primary's* replicated prefix
@@ -214,7 +215,7 @@ class CoordinatorDB:
 
     def create(self, asr: ASR) -> Coordinator:
         coord = Coordinator(coord_id=fresh_id("coord"), asr=asr)
-        coord.history.append((time.time(), coord.state.value))
+        coord.history.append((active_clock().timestamp(), coord.state.value))
         with self._lock:
             self._coords[coord.coord_id] = coord
         self._persist(coord)
@@ -243,7 +244,7 @@ class CoordinatorDB:
                 raise InvalidTransition(
                     f"{coord.coord_id}: {coord.state.value} -> {new.value}")
             coord.state = new
-            coord.history.append((time.time(), new.value, reason))
+            coord.history.append((active_clock().timestamp(), new.value, reason))
         self._persist(coord)
 
     def persist(self, coord: Coordinator) -> None:

@@ -24,10 +24,10 @@ from __future__ import annotations
 import dataclasses
 import math
 import threading
-import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.clusters.base import VMHandle
+from repro.sim.simtime import active_clock
 from repro.clusters.simulator import sim_sleep
 
 
@@ -158,7 +158,10 @@ class MonitoringManager:
             self._thread = None
 
     def _loop(self) -> None:
-        while not self._stop.wait(self.poll_interval_s):
+        # poll pacing through the installed clock (read live so a virtual
+        # clock installed for the test session is honored): under SimClock
+        # the interval elapses in virtual time instead of wall sleeping
+        while not active_clock().wait(self._stop, self.poll_interval_s):
             with self._lock:
                 watched = dict(self._watched)
             for coord_id, info in watched.items():

@@ -43,7 +43,6 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-import time
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.ckpt import gc as ckpt_gc
@@ -51,6 +50,7 @@ from repro.ckpt.layout import COMMITTED, MANIFEST, step_prefix
 from repro.ckpt.plane import ByteBudget, DataPlaneConfig, shared_executor
 from repro.ckpt.reader import list_steps, load_manifest
 from repro.ckpt.storage import ObjectStore
+from repro.sim.simtime import active_clock
 from repro.core.coordinator import Coordinator, CoordState
 
 
@@ -99,21 +99,24 @@ class _Throttle:
     def __init__(self, bps: Optional[float]):
         self.bps = bps
         self._lock = threading.Lock()
-        self._next_free = time.monotonic()
+        self._next_free = active_clock().now()
 
     def debit(self, nbytes: int) -> None:
         if not self.bps:
             return
+        clk = active_clock()
         with self._lock:
-            now = time.monotonic()
+            now = clk.now()
+            # nbytes/bps is a wall-tuned duration; map it onto the clock's
+            # native axis so the aggregate rate is preserved virtually
             start = max(self._next_free, now)
-            self._next_free = start + nbytes / self.bps
+            self._next_free = start + clk.from_wall(nbytes / self.bps)
             # the chunk occupies the link for nbytes/bps: wait for our own
             # transfer slot to finish, not just for the link to free up —
             # otherwise a single large chunk would never be throttled
             delay = self._next_free - now
         if delay > 0:
-            time.sleep(delay)
+            clk.sleep_until(now + delay)
 
 
 def _pair_state() -> Dict[str, Any]:
@@ -207,7 +210,7 @@ class ImageReplicator:
             self._thread = None
 
     def _loop(self) -> None:
-        while not self._stop.wait(self.tick_s):
+        while not active_clock().wait(self._stop, self.tick_s):
             try:
                 self.sync()
             except Exception:                  # noqa: BLE001
@@ -454,7 +457,7 @@ class FailoverController:
             self._thread = None
 
     def _loop(self) -> None:
-        while not self._stop.wait(self.poll_interval_s):
+        while not active_clock().wait(self._stop, self.poll_interval_s):
             for coord_id in self.replicator.watched():
                 with self._lock:
                     if coord_id in self.results or coord_id in self._inflight:
@@ -518,7 +521,7 @@ class FailoverController:
                 if coord_id not in self._inflight:
                     self._inflight.add(coord_id)
                     break
-            time.sleep(0.002)
+            active_clock().sleep(0.002)
         try:
             result = self._failover(coord_id)
         finally:
@@ -533,7 +536,7 @@ class FailoverController:
         coord = self.primary.db.get(coord_id)
         t_error = self._last_transition(coord, "ERROR")
         t_down = self._last_transition(coord, "RESTARTING")
-        t0 = time.time()
+        t0 = active_clock().timestamp()
         try:
             repl_snapshot = self.replicator.replication_stats(coord_id)
         except Exception:                      # noqa: BLE001
@@ -566,7 +569,7 @@ class FailoverController:
         dst.restart_from(dst_coord.coord_id, step)
         dst.wait_for_state(dst_coord.coord_id, CoordState.RUNNING,
                            timeout=self.restart_timeout_s)
-        t_up = time.time()
+        t_up = active_clock().timestamp()
 
         rpo_images = self._rpo_images(coord, step)
         detection = (None if t_error is None or t_down is None

@@ -53,13 +53,16 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.ckpt.reader import list_steps, load_manifest
 from repro.core.coordinator import ASR, Coordinator, CoordState
+from repro.sim.simtime import active_clock
 
 
 class WallClock:
     """Default scheduler clock (monotonic wall seconds). Chaos scenarios
     inject :class:`repro.core.chaos.VirtualClock` instead so queue
     timestamps and aging run in TIME_SCALE-compressed virtual seconds and
-    replay bit-for-bit."""
+    replay bit-for-bit.  When a virtual clock is installed process-wide
+    (repro.sim), the scheduler defaults to it instead — see
+    ``GlobalScheduler.__init__``."""
 
     def now(self) -> float:
         return time.monotonic()
@@ -125,7 +128,9 @@ class GlobalScheduler:
         ``aging_rate`` is effective-priority units per (injected-clock)
         second of queue wait; 0 disables aging."""
         self.service = service
-        self.clock = clock or WallClock()
+        # explicit clock wins; otherwise the process-wide installed clock
+        # (WallClock in production, SimClock under the virtual-time fixture)
+        self.clock = clock or active_clock()
         self.cloud_stores = {name: "default"
                              for name in service.cloud.backends()}
         self.cloud_stores.update(cloud_stores or {})
@@ -238,7 +243,7 @@ class GlobalScheduler:
         while not self._stop.is_set():
             # event-driven: woken by capacity/fault/submit/replication
             # events; tick_s is only the aging-re-evaluation heartbeat
-            self._wake.wait(self.tick_s)
+            active_clock().wait(self._wake, self.tick_s)
             self._wake.clear()
             if self._stop.is_set():
                 return

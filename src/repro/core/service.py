@@ -39,6 +39,7 @@ from repro.core.cloud_manager import CloudManager
 from repro.core.coordinator import (ASR, Coordinator, CoordinatorDB,
                                     CoordState)
 from repro.core.provision import ProvisionManager
+from repro.sim.simtime import active_clock
 
 
 class CACSService:
@@ -148,6 +149,9 @@ class CACSService:
     # ---- convenience -----------------------------------------------------
     def wait_for_state(self, coord_id: str, state: CoordState,
                        timeout: float = 30.0) -> Coordinator:
+        # the safety deadline stays on the wall clock (bounds real test
+        # time); the poll pacing goes through the installed clock so a
+        # virtual-time run advances instead of wall-sleeping
         deadline = time.monotonic() + timeout
         while time.monotonic() < deadline:
             coord = self.db.get(coord_id)
@@ -156,7 +160,7 @@ class CACSService:
             if coord.state == CoordState.ERROR and state != CoordState.ERROR:
                 raise RuntimeError(
                     f"{coord_id} entered ERROR: {coord.error}")
-            time.sleep(0.005)
+            active_clock().sleep(0.005)
         raise TimeoutError(
             f"{coord_id} did not reach {state.value} in {timeout}s "
             f"(now {self.db.get(coord_id).state.value})")

@@ -1,0 +1,21 @@
+"""Virtual-time simulation layer.
+
+* ``Clock`` / ``WallClock`` / ``SimClock`` — the time-source protocol the
+  whole control plane sleeps and waits through.  Production installs
+  ``WallClock`` (real time, unchanged behavior); tests install a
+  ``SimClock`` that jumps straight to the next pending deadline.
+* ``EventQueue`` — deterministic ``(time, seq)`` priority queue.
+* ``SimEngine`` — pure single-threaded discrete-event cluster simulation
+  for large-scale deterministic scenarios (thousands of hosts, simulated
+  weeks, byte-identical traces).
+"""
+from repro.sim.engine import InvariantViolation, SimEngine, SimJob
+from repro.sim.simtime import (TIME_SCALE, Clock, Event, EventQueue,
+                               SimClock, WallClock, active_clock,
+                               install_clock, use_clock)
+
+__all__ = [
+    "TIME_SCALE", "Clock", "Event", "EventQueue", "SimClock", "WallClock",
+    "active_clock", "install_clock", "use_clock",
+    "InvariantViolation", "SimEngine", "SimJob",
+]

@@ -13,6 +13,32 @@ import numpy as np
 import pytest
 
 
+@pytest.fixture
+def sim_clock():
+    """Run a test on the discrete-event virtual clock (repro.sim).
+
+    Installs a fresh SimClock process-wide for the duration of the test:
+    every ``sim_sleep``, store latency, daemon poll and settle wait in the
+    control plane advances virtual time instantly instead of wall
+    sleeping.  Suites opt in with a module-local autouse shim::
+
+        @pytest.fixture(autouse=True)
+        def _virtual_time(sim_clock):
+            yield
+
+    Teardown closes the clock (wakes every sleeper) *after* the test's own
+    service fixtures have shut down, then restores the wall clock.
+    """
+    from repro.sim import SimClock, install_clock
+    clk = SimClock()
+    prev = install_clock(clk)
+    try:
+        yield clk
+    finally:
+        clk.close()
+        install_clock(prev)
+
+
 def make_batch(cfg, model, B, S, seed=0):
     rng = np.random.Generator(np.random.PCG64(seed))
     toks = lambda b, s: rng.integers(0, cfg.vocab_size, (b, s)).astype(np.int32)

@@ -19,6 +19,15 @@ from repro.core import (ASR, CACSService, ChaosHealthHook, CheckpointPolicy,
                         CoordState, FaultEvent, FaultKind, FaultSchedule,
                         SimulatedApp, run_scenario)
 from repro.core.monitoring import heartbeat_roundtrip
+from repro.sim import active_clock
+
+
+@pytest.fixture(autouse=True)
+def _virtual_time(sim_clock):
+    """The whole suite runs on the discrete-event virtual clock: every
+    sleep/poll in the control plane advances virtual time instantly, so
+    multi-fault scenarios settle in milliseconds of wall time."""
+    yield
 
 
 def _mk_service(backend_cls=SnoozeBackend, n_hosts=16, store=None,
@@ -41,11 +50,13 @@ def _submit(svc, backend, n_vms=4, period=0.0, hook=None, **app_kw):
 
 
 def _wait(pred, timeout=30.0):
+    # wall safety deadline, clock-paced polling: the poll itself drives
+    # virtual time forward when the system is otherwise idle
     deadline = time.monotonic() + timeout
     while time.monotonic() < deadline:
         if pred():
             return True
-        time.sleep(0.01)
+        active_clock().sleep(0.01)
     return False
 
 
@@ -237,7 +248,7 @@ def test_double_vm_failure_triggers_single_recovery():
         backend.sim.fail_host(coord.vms[2].host.host_id)
         assert _wait(lambda: coord.recoveries >= 1
                      and coord.state == CoordState.RUNNING)
-        time.sleep(0.3)           # any spurious second recovery would land
+        active_clock().sleep(0.3)  # any spurious second recovery would land
         assert coord.recoveries == 1
         assert all(vm.reachable for vm in coord.vms)
         assert coord.app.restarts == 1
@@ -260,7 +271,7 @@ def test_immediate_resume_after_suspend_gets_healthy_cluster():
         assert coord.state == CoordState.RUNNING      # the API allows
         assert len(coord.vms) == 4
         assert all(vm.reachable for vm in coord.vms)
-        time.sleep(0.2)                      # suspend teardown fully done
+        active_clock().sleep(0.2)            # suspend teardown fully done
         assert all(vm.reachable for vm in coord.vms), \
             "suspend teardown destroyed the resumed cluster"
     finally:

@@ -11,6 +11,12 @@ from repro.clusters import SnoozeBackend
 from repro.core.monitoring import heartbeat_roundtrip, tree_depth
 
 
+@pytest.fixture(autouse=True)
+def _virtual_time(sim_clock):
+    """Run this suite on the discrete-event virtual clock (repro.sim)."""
+    yield
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.integers(1, 4096))
 def test_tree_depth_is_log2(n):

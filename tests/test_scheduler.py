@@ -10,6 +10,14 @@ from repro.clusters import OpenStackBackend, SnoozeBackend
 from repro.core import (ASR, CACSService, CheckpointPolicy, CoordState,
                         GlobalScheduler, ImageReplicator, ReplicationPolicy,
                         SimulatedApp, StandbyTarget)
+from repro.sim import active_clock
+
+
+@pytest.fixture(autouse=True)
+def _virtual_time(sim_clock):
+    """Run this suite on the discrete-event virtual clock (repro.sim)."""
+    yield
+
 
 
 @pytest.fixture
@@ -248,7 +256,7 @@ def test_cross_cloud_backfill_zero_reuploads():
             c = svc.db.get(low)
             if c.state == CoordState.RUNNING and c.asr.backend == "openstack":
                 break
-            time.sleep(0.02)
+            active_clock().sleep(0.02)
         c = svc.db.get(low)
         assert (c.state, c.asr.backend) == (CoordState.RUNNING, "openstack")
         assert sched.backfills == 1

@@ -12,6 +12,17 @@ from repro.core import (ASR, CACSService, ChaosController, CheckpointPolicy,
                         GlobalScheduler, ImageReplicator, ReplicationPolicy,
                         SimulatedApp, StandbyTarget)
 from repro.core.chaos import VirtualClock
+from repro.sim import active_clock
+
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _virtual_time(sim_clock):
+    """Run this suite on the discrete-event virtual clock (repro.sim)."""
+    yield
+
 
 
 def _run_outage_scenario(seed, record_lock=False):
@@ -68,7 +79,7 @@ def _run_outage_scenario(seed, record_lock=False):
         deadline = time.monotonic() + 30
         while (time.monotonic() < deadline
                and coord.state != CoordState.RUNNING):
-            time.sleep(0.01)
+            active_clock().sleep(0.01)
         return {
             "ok": all(o.ok for o in outcomes),
             "trace": [o.trace_key() for o in outcomes],
@@ -147,7 +158,7 @@ def test_vm_crash_on_spanning_scheduler_recovers_in_place():
         while time.monotonic() < deadline:
             if coord.recoveries >= 1 and coord.state == CoordState.RUNNING:
                 break
-            time.sleep(0.02)
+            active_clock().sleep(0.02)
         assert coord.state == CoordState.RUNNING
         assert coord.asr.backend == "snooze", "no cross-cloud move"
         assert sched.backfills == 0 and sched.requeues == 0

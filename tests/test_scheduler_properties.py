@@ -25,6 +25,16 @@ from repro.ckpt import InMemoryStore
 from repro.clusters import OpenStackBackend, SnoozeBackend
 from repro.core import (ASR, CACSService, CheckpointPolicy, CoordState,
                         GlobalScheduler, SimulatedApp, WorkloadTrace)
+from repro.sim import active_clock
+
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _virtual_time(sim_clock):
+    """Run this suite on the discrete-event virtual clock (repro.sim)."""
+    yield
+
 
 MAX_EXAMPLES = int(os.environ.get("SCHED_PROP_EXAMPLES", "6"))
 N_HOSTS = {"snooze": 5, "openstack": 4}
@@ -48,11 +58,10 @@ def _asr(job):
 
 
 def _quiesce(sched, max_passes=400):
-    import time
     for _ in range(max_passes):
         if sched.tick() == 0 and sched.inflight_depth == 0:
             return
-        time.sleep(0.01)       # placements complete on the background pool
+        active_clock().sleep(0.01)  # placements finish on the background pool
     raise AssertionError("scheduler did not quiesce (placement ping-pong?)")
 
 
@@ -154,12 +163,11 @@ def test_no_starvation_with_aging(seed):
         max_priority=9)
     svc, sched, backends = _build(aging_rate=5.0)
     try:
-        import time
         cids = {sched.submit(_asr(job)): job.name for job in trace.jobs}
         ran = set()
         for _ in range(400):
             sched.tick()
-            time.sleep(0.01)
+            active_clock().sleep(0.01)
             running = [cid for cid in cids
                        if cid in {c.coord_id for c in svc.db.list()}
                        and svc.db.get(cid).state == CoordState.RUNNING]

@@ -1,0 +1,118 @@
+"""Large-scale determinism + soak tests for the discrete-event engine.
+
+These are the acceptance teeth for the virtual-time work: a seeded
+scenario with >= 1,000 hosts and >= 24 simulated hours must finish in
+well under 10s of wall time and replay byte-identically, and a
+week-long 10,000-lifecycle soak with mixed faults must hold the
+capacity-safety / no-starvation / bounded-rollback invariants while
+staying inside a tight wall budget.
+"""
+import time
+
+import pytest
+
+from repro.sim import SimEngine
+
+WALL_BUDGET_ACCEPT_S = 10.0      # the ISSUE acceptance bound
+WALL_BUDGET_SOAK_S = 30.0        # generous for slow CI; ~1.5s locally
+
+
+def _day_scale_engine(seed: int) -> SimEngine:
+    eng = SimEngine(n_hosts=1000, seed=seed, host_mtbf_s=200_000.0)
+    eng.load(n_jobs=3000, horizon_s=86_400.0)
+    eng.run()
+    return eng
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 1,000 hosts x 24 simulated hours, < 10s wall, replayable
+# ---------------------------------------------------------------------------
+
+def test_thousand_hosts_one_day_under_wall_budget():
+    t0 = time.monotonic()
+    eng = _day_scale_engine(seed=7)
+    wall = time.monotonic() - t0
+    assert wall < WALL_BUDGET_ACCEPT_S, \
+        f"24 simulated hours on 1000 hosts took {wall:.2f}s wall"
+    assert eng.now >= 86_400.0 * 0.9          # ran (nearly) the full day
+    assert eng.completed == 3000
+    assert eng.recoveries > 0                  # faults actually fired
+    assert eng.events_fired > 20_000
+
+
+def test_thousand_host_trace_replays_byte_identically():
+    a = _day_scale_engine(seed=7)
+    b = _day_scale_engine(seed=7)
+    assert a.trace_digest() == b.trace_digest()
+    assert a.trace_bytes() == b.trace_bytes()
+    # and a different seed genuinely changes the trace
+    c = _day_scale_engine(seed=8)
+    assert c.trace_digest() != a.trace_digest()
+
+
+# ---------------------------------------------------------------------------
+# soak: 1,000 hosts x 10,000 job lifecycles x a simulated week
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def soak():
+    """Arrivals packed into 4 days (utilisation ~0.96) so the preemption
+    and aging paths are genuinely exercised; faults span the whole week."""
+    t0 = time.monotonic()
+    eng = SimEngine(n_hosts=1000, seed=11, host_mtbf_s=2_592_000.0)
+    eng.load(n_jobs=10_000, horizon_s=7 * 86_400.0,
+             arrival_horizon_s=4 * 86_400.0, mean_work_s=7200.0)
+    eng.run()
+    eng.wall_s = time.monotonic() - t0
+    return eng
+
+
+def test_soak_simulates_a_week_within_wall_budget(soak):
+    assert soak.wall_s < WALL_BUDGET_SOAK_S, \
+        f"week-long soak took {soak.wall_s:.2f}s wall"
+    assert soak.now >= 6 * 86_400.0            # a real week-scale horizon
+    assert soak.events_fired > 100_000
+
+
+def test_soak_no_starvation_every_lifecycle_completes(soak):
+    assert soak.completed == 10_000
+    unfinished = [j.jid for j in soak.jobs if j.finished_at < 0]
+    assert unfinished == []
+
+
+def test_soak_exercises_preemption_and_recovery(soak):
+    assert soak.preemptions > 100, "load should force real preemption"
+    assert soak.recoveries > 50, "mtbf should force real host faults"
+
+
+def test_soak_capacity_safety_and_work_conservation(soak):
+    # deep checks already ran every DEEP_CHECK_EVERY events during run();
+    # re-assert the terminal state explicitly
+    soak.check_invariants()
+    soak.assert_work_conserving()
+    assert soak.used == 0 and len(soak.free) == soak.n_hosts
+    assert soak.host_job == {}
+
+
+def test_soak_rollback_bounded_by_checkpoint_period(soak):
+    """No fault may lose more progress than one checkpoint period."""
+    period = 900.0
+    losses = []
+    for line in soak.trace:
+        parts = line.split()
+        if parts[1] == "fault" and len(parts) > 4:
+            losses.append(float(parts[4].split("=", 1)[1]))
+    assert losses, "no occupied-host faults in the soak trace"
+    worst = max(losses)
+    assert worst <= period + 1e-6, \
+        f"a fault lost {worst:.1f}s of work (> ckpt period {period}s)"
+
+
+def test_soak_trace_digest_is_stable(soak):
+    """Replay the identical config and require byte equality — the trace
+    is the regression artifact for the whole scheduling/fault policy."""
+    eng = SimEngine(n_hosts=1000, seed=11, host_mtbf_s=2_592_000.0)
+    eng.load(n_jobs=10_000, horizon_s=7 * 86_400.0,
+             arrival_horizon_s=4 * 86_400.0, mean_work_s=7200.0)
+    eng.run()
+    assert eng.trace_digest() == soak.trace_digest()

@@ -1,0 +1,249 @@
+"""Virtual-time layer: EventQueue determinism, SimClock semantics,
+wall-clock-leak regression pins, and cross-process replay determinism
+(same seed → identical trace bytes under different PYTHONHASHSEED)."""
+import os
+import subprocess
+import sys
+import threading
+import time
+
+import pytest
+
+from repro.sim import (TIME_SCALE, EventQueue, SimClock, SimEngine,
+                       WallClock, active_clock, install_clock, use_clock)
+
+
+# ---------------------------------------------------------------------------
+# EventQueue
+# ---------------------------------------------------------------------------
+
+def test_events_pop_in_time_order():
+    q = EventQueue()
+    q.schedule(3.0, "c")
+    q.schedule(1.0, "a")
+    q.schedule(2.0, "b")
+    assert [q.pop().kind for _ in range(3)] == ["a", "b", "c"]
+    assert q.pop() is None
+
+
+def test_ties_break_fifo_by_schedule_order():
+    q = EventQueue()
+    for i in range(50):
+        q.schedule(7.0, f"k{i}")
+    assert [q.pop().kind for _ in range(50)] == [f"k{i}" for i in range(50)]
+
+
+def test_cancel_removes_event():
+    q = EventQueue()
+    keep = q.schedule(1.0, "keep")
+    drop = q.schedule(0.5, "drop")
+    assert q.cancel(drop)
+    assert not q.cancel(drop), "double-cancel must be a no-op"
+    assert len(q) == 1
+    assert q.pop() is keep
+    assert q.pop() is None
+
+
+def test_reschedule_moves_event_and_loses_fifo_slot():
+    q = EventQueue()
+    a = q.schedule(1.0, "a")
+    b = q.schedule(1.0, "b")
+    # moving a to the same time re-queues it AFTER b (new seq)
+    q.reschedule(a, 1.0)
+    assert a.cancelled
+    assert [q.pop().kind for _ in range(2)] == ["b", "a"]
+
+
+def test_peek_and_next_time_skip_cancelled():
+    q = EventQueue()
+    first = q.schedule(1.0, "first")
+    q.schedule(2.0, "second")
+    q.cancel(first)
+    assert q.next_time() == 2.0
+    assert q.peek().kind == "second"
+
+
+# ---------------------------------------------------------------------------
+# SimClock
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def clk():
+    c = SimClock()
+    yield c
+    c.close()
+
+
+def test_sleep_advances_virtual_not_wall(clk):
+    t0_wall = time.monotonic()
+    clk.paper_sleep(500.0)                     # 500 paper seconds
+    wall = time.monotonic() - t0_wall
+    assert clk.now() >= 500.0
+    assert wall < 2.0, f"virtual sleep burned {wall:.2f}s of wall time"
+
+
+def test_wall_tuned_sleep_maps_through_time_scale(clk):
+    clk.sleep(0.05)                            # a historical wall knob
+    assert clk.now() == pytest.approx(0.05 / TIME_SCALE)
+
+
+def test_concurrent_sleepers_wake_in_deadline_order(clk):
+    order = []
+    lock = threading.Lock()
+
+    def sleeper(dt):
+        clk.paper_sleep(dt)
+        with lock:
+            order.append(dt)
+
+    threads = [threading.Thread(target=sleeper, args=(dt,))
+               for dt in (30.0, 10.0, 20.0)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=10)
+    assert order == [10.0, 20.0, 30.0]
+
+
+def test_wait_times_out_in_virtual_time(clk):
+    ev = threading.Event()
+    t0_wall = time.monotonic()
+    assert clk.wait(ev, timeout=5.0) is False   # 5 wall-tuned = 500 virtual
+    assert time.monotonic() - t0_wall < 2.0
+    assert clk.now() >= 5.0 / TIME_SCALE
+
+
+def test_wait_notices_set_event(clk):
+    """A set() landing before the virtual deadline wins the wait.  The
+    setter sleeps 100 virtual seconds; the waiter's timeout is 6000 — the
+    earlier virtual deadline fires first, whatever the wall timing."""
+    ev = threading.Event()
+
+    def setter():
+        clk.paper_sleep(100.0)
+        ev.set()
+
+    threading.Thread(target=setter, daemon=True).start()
+    assert clk.wait(ev, timeout=60.0) is True  # 60 wall-tuned = 6000 virtual
+
+
+def test_close_wakes_all_sleepers():
+    c = SimClock(grace_s=10.0)                 # advancer effectively stuck
+    done = threading.Event()
+
+    def sleeper():
+        c.paper_sleep(1e9)
+        done.set()
+
+    threading.Thread(target=sleeper, daemon=True).start()
+    time.sleep(0.05)
+    c.close()
+    assert done.wait(2.0), "close() must release blocked sleepers"
+
+
+def test_install_clock_restores_previous():
+    wall = active_clock()
+    c = SimClock()
+    prev = install_clock(c)
+    try:
+        assert active_clock() is c
+    finally:
+        install_clock(prev)
+        c.close()
+    assert active_clock() is wall
+    assert isinstance(wall, WallClock)
+
+
+# ---------------------------------------------------------------------------
+# wall-clock-leak regression pins (satellite: the port exposed these)
+# ---------------------------------------------------------------------------
+
+def test_monitor_poll_loop_pinned_to_virtual_time(sim_clock):
+    """The monitor's poll-interval wait used to be a raw Event.wait on
+    wall time; 40 polls at 50 ms would cost 2+ wall seconds.  On the
+    virtual clock they must complete in well under that."""
+    from repro.clusters import SnoozeBackend
+    from repro.core.monitoring import MonitoringManager
+
+    backend = SnoozeBackend(n_hosts=8)
+    vms = backend.allocate_vms(4, None, owner="t")
+    mon = MonitoringManager(lambda cid, kind: None, poll_interval_s=0.05)
+    mon.watch("t", vms, lambda: True, native_notifications=True)
+    mon.start()
+    t0 = time.monotonic()
+    try:
+        while mon.heartbeats < 40 and time.monotonic() - t0 < 10:
+            active_clock().sleep(0.01)
+    finally:
+        mon.stop()
+    wall = time.monotonic() - t0
+    assert mon.heartbeats >= 40
+    assert wall < 1.5, f"poll loop leaked wall time: {wall:.2f}s for 40 polls"
+
+
+def test_chaos_event_pacing_pinned_to_virtual_time(sim_clock):
+    """The controller sleeps to each event's virtual offset; an event 200
+    virtual seconds out used to cost 2 wall seconds of pacing alone."""
+    from repro.core.chaos import FaultEvent, FaultKind, FaultSchedule, \
+        run_scenario
+
+    sched = FaultSchedule(seed=1, events=[
+        FaultEvent(5.0, FaultKind.VM_CRASH, vm_index=0),
+        FaultEvent(205.0, FaultKind.VM_CRASH, vm_index=1),
+    ])
+    t0 = time.monotonic()
+    result = run_scenario(sched)
+    wall = time.monotonic() - t0
+    assert all(o.ok for o in result.outcomes)
+    assert wall < 1.9, f"chaos pacing leaked wall time: {wall:.2f}s"
+
+
+# ---------------------------------------------------------------------------
+# replay determinism across processes (PYTHONHASHSEED-proof)
+# ---------------------------------------------------------------------------
+
+_REPLAY_SNIPPET = """
+import sys
+sys.path.insert(0, {src!r})
+from repro.sim import SimEngine
+eng = SimEngine(n_hosts=64, seed=1234, host_mtbf_s=40_000.0)
+eng.load(n_jobs=300, horizon_s=20_000.0)
+eng.run()
+print(eng.trace_digest())
+print(eng.completed, eng.events_fired)
+"""
+
+
+def _run_replay(hashseed: str) -> str:
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env = dict(os.environ, PYTHONHASHSEED=hashseed)
+    r = subprocess.run(
+        [sys.executable, "-c", _REPLAY_SNIPPET.format(src=os.path.abspath(src))],
+        capture_output=True, text=True, timeout=120, env=env)
+    assert r.returncode == 0, f"replay subprocess failed:\n{r.stderr}"
+    return r.stdout
+
+
+def test_replay_identical_across_fresh_processes():
+    """Same seed → byte-identical event trace in two fresh interpreters
+    with different hash randomization (nothing may depend on dict/set
+    iteration order)."""
+    out_a = _run_replay("0")
+    out_b = _run_replay("424242")
+    assert out_a == out_b
+    digest, counts = out_a.strip().splitlines()
+    assert len(digest) == 64
+    completed, fired = map(int, counts.split())
+    assert completed > 0 and fired > completed
+
+
+def test_engine_trace_replay_in_process():
+    def build():
+        eng = SimEngine(n_hosts=32, seed=9, host_mtbf_s=30_000.0)
+        eng.load(n_jobs=200, horizon_s=10_000.0)
+        eng.run()
+        return eng
+
+    a, b = build(), build()
+    assert a.trace_bytes() == b.trace_bytes()
+    assert a.trace_digest() == b.trace_digest()
