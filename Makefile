@@ -5,14 +5,15 @@
 #   make chaos-smoke     seeded fault-recovery scenario sweep (MTTR per class)
 #   make failover-smoke  seeded cross-cloud outage -> standby failover
 #   make sched-smoke     seeded over-subscription scenario + property suite
+#   make gang-smoke      gang barrier overhead + outage shrink-restore MTTR
 #   make bench-diff      fresh chaos+scheduler benches vs committed baselines
 #   make docs-lint       sanity-check docs: files exist, internal refs resolve
 
 PY      ?= python
 PYPATH  := src
 
-.PHONY: test bench-smoke chaos-smoke failover-smoke sched-smoke bench-diff \
-	docs-lint
+.PHONY: test bench-smoke chaos-smoke failover-smoke sched-smoke gang-smoke \
+	bench-diff docs-lint
 
 test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
@@ -32,9 +33,14 @@ sched-smoke:
 	SCHED_PROP_EXAMPLES=25 PYTHONPATH=$(PYPATH) $(PY) -m pytest -q \
 		tests/test_scheduler_properties.py tests/test_scheduler_chaos.py
 
+gang-smoke:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only gang
+	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q \
+		tests/test_gang.py tests/test_gang_chaos.py
+
 bench-diff:
 	CHAOS_TRIALS=2 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run \
-		--only fault_recovery,oversubscription --json-dir bench-results
+		--only fault_recovery,oversubscription,gang --json-dir bench-results
 	$(PY) scripts/bench_diff.py --fresh bench-results
 
 docs-lint:

@@ -21,7 +21,7 @@ import traceback
 
 ALL = ("fig3", "table2", "table2incr", "fig4", "fig5", "fig6",
        "ckpt_path", "pplane", "fault_recovery", "replication",
-       "oversubscription")
+       "oversubscription", "gang")
 
 
 def main() -> None:
@@ -35,8 +35,9 @@ def main() -> None:
 
     from benchmarks import (ckpt_path, fault_recovery, fig3_scalability,
                             fig4_service_load, fig5_migration, fig6_backends,
-                            oversubscription, parallel_plane, replication,
-                            table2_image_size, table2_incremental)
+                            gang, oversubscription, parallel_plane,
+                            replication, table2_image_size,
+                            table2_incremental)
     from benchmarks.common import CSV_ROWS
 
     modules = {
@@ -51,6 +52,7 @@ def main() -> None:
         "fault_recovery": fault_recovery,
         "replication": replication,
         "oversubscription": oversubscription,
+        "gang": gang,
     }
     print("bench,param,metric,value")
     failures = 0

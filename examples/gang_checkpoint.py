@@ -1,0 +1,164 @@
+"""Gang-consistent checkpointing of a multi-VM job, three acts.
+
+Act 1 — a consistent cut of a live message-passing job: a 4-rank gang
+exchanges messages over the simulated fabric while the two-phase
+barrier (quiesce → drain → save → commit) snapshots all ranks plus
+every in-flight message into ONE image. The conservation invariant
+(sent == applied + in-flight) holds on the restored cut.
+
+Act 2 — all-or-nothing under a mid-barrier fault: a rank's host dies
+inside the drain phase. The epoch aborts, the torn step never becomes
+visible, and the previous committed image still restores at full rank
+count.
+
+Act 3 — outage-driven elastic shrink: the gang's home cloud dies; the
+GlobalScheduler reshards the 4-rank image onto the standby cloud's 2
+surviving ranks (zero chunk re-uploads, every shared chunk fetched
+exactly once) and the survivors resume from the cut.
+
+Runs on the discrete-event virtual clock: tens of virtual seconds of
+outage detection and recovery complete in a few wall seconds.
+
+    PYTHONPATH=src python examples/gang_checkpoint.py
+"""
+import time
+import types
+
+from repro.ckpt.gang import GangCheckpointer, load_gang_ranks
+from repro.ckpt.reader import list_steps
+from repro.ckpt.storage import InMemoryStore
+from repro.clusters import OpenStackBackend, SnoozeBackend
+from repro.clusters.base import SimBackend, VMTemplate
+from repro.clusters.simulator import ClusterSim
+from repro.core import (ASR, CACSService, CheckpointPolicy, CoordState,
+                        GangApp, GangBarrierError, GangCoordinator,
+                        GlobalScheduler, gang_invariant)
+from repro.core.chaos import VirtualClock
+from repro.core.gang import GANG_ROUTED, GANG_SHARDED
+from repro.sim import SimClock, active_clock, use_clock
+
+
+def _wait(pred, timeout_s: float = 60.0) -> bool:
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        active_clock().sleep(0.01)
+    return False
+
+
+def _harness(n_ranks=4, rows=16):
+    sim = ClusterSim(n_ranks * 2, name="c0")
+    backend = SimBackend(sim)
+    vms = backend.allocate_vms(n_ranks, VMTemplate(), "gang")
+    app = GangApp(global_rows=rows, iter_time_s=0.05)
+    ctx = types.SimpleNamespace(coord_id="demo", vms=vms, service=None,
+                                transport=sim)
+    app.start(ctx, None)
+    store = InMemoryStore()
+    ck = GangCheckpointer(store, "apps/demo")
+    coord = GangCoordinator(
+        app, sim,
+        lambda step, trees: ck.save(step, trees, sharded=GANG_SHARDED,
+                                    routed=GANG_ROUTED),
+        trace_id="tr-demo-0000")
+    return sim, vms, app, store, coord
+
+
+def act1_consistent_cut() -> None:
+    print("[gang] act 1: consistent cut of a live message-passing job")
+    sim, _, app, store, coord = _harness()
+    try:
+        active_clock().sleep(1.0)              # messages in flight
+        coord.snapshot(1)
+        trees, man, stats = load_gang_ranks(store, "apps/demo", n_ranks=4)
+        inv = gang_invariant(trees)
+        print(f"[gang]   committed epoch 1: {man.metadata['gang']['ranks']} "
+              f"ranks, {int(inv['inflight'])} in-flight rows in the image")
+        print(f"[gang]   conservation sent==applied+inflight: "
+              f"{'OK' if inv['consistent'] == 1.0 else 'TORN'} "
+              f"(sent={int(inv['sent'])}, applied={int(inv['applied'])})")
+    finally:
+        app.stop()
+
+
+def act2_mid_barrier_crash() -> None:
+    print("[gang] act 2: rank crash mid-drain aborts all-or-nothing")
+    sim, vms, app, store, coord = _harness()
+    try:
+        active_clock().sleep(1.0)
+        coord.snapshot(1)
+        hid = vms[2].host.host_id
+        coord.arm("drain", lambda: sim.fail_host(hid))
+        try:
+            coord.snapshot(2)
+        except GangBarrierError as e:
+            print(f"[gang]   epoch 2 aborted: {e.reason}")
+        steps = list_steps(store, "apps/demo")
+        print(f"[gang]   visible steps: {steps} (torn step 2 invisible)")
+        trees, _, _ = load_gang_ranks(store, "apps/demo", n_ranks=4)
+        ok = gang_invariant(trees)["consistent"] == 1.0
+        print(f"[gang]   previous image restores consistent: "
+              f"{'OK' if ok else 'TORN'}")
+    finally:
+        app.stop()
+
+
+def act3_outage_shrink() -> None:
+    print("[gang] act 3: cloud outage -> elastic shrink onto 2 survivors")
+    home = SnoozeBackend(n_hosts=8)
+    standby = OpenStackBackend(n_hosts=2)
+    svc = CACSService({"snooze": home, "openstack": standby},
+                      {"default": InMemoryStore()})
+    sched = GlobalScheduler(svc, clock=VirtualClock(),
+                            cloud_stores={"snooze": "default",
+                                          "openstack": "default"})
+    svc.attach_scheduler(sched)
+    sched.start()
+    try:
+        cid = sched.submit(ASR(
+            name="gang-demo", n_vms=4, backend="snooze", priority=5,
+            app_factory=lambda: GangApp(global_rows=16, iter_time_s=0.05),
+            policy=CheckpointPolicy(period_s=0, keep_last=3),
+            gang=True, min_vms=2))
+        svc.wait_for_state(cid, CoordState.RUNNING, 30)
+        active_clock().paper_sleep(1.0)
+        svc.trigger_checkpoint(cid)
+        coord = svc.db.get(cid)
+        print(f"[gang]   4-rank gang RUNNING on snooze, image committed")
+        t0 = active_clock().timestamp()
+        home.sim.cloud_outage()
+        assert _wait(lambda: coord.state != CoordState.RUNNING)
+        assert _wait(lambda: coord.state == CoordState.RUNNING)
+        mttr = (active_clock().timestamp() - t0) / active_clock().scale
+        m = coord.metrics
+        print(f"[gang]   outage detected, shrink-restored onto "
+              f"{len(coord.vms)} ranks of {coord.asr.backend} "
+              f"in {mttr:.1f}s (virtual)")
+        print(f"[gang]   chunks re-uploaded: "
+              f"{int(m.get('backfill_reuploads', -1))}; restore fetches "
+              f"{int(m['gang_restore_fetches'])} of "
+              f"{int(m['gang_restore_unique'])} unique (single-flight)")
+        for seq, op, name, backend, detail, trace_id in \
+                sched.decision_trace():
+            print(f"[gang]     {seq:3d} {trace_id} {op:8s} "
+                  f"{name}@{backend} {detail}")
+    finally:
+        sched.stop()
+        svc.shutdown()
+
+
+def main() -> None:
+    clk = SimClock()
+    try:
+        with use_clock(clk):
+            act1_consistent_cut()
+            act2_mid_barrier_crash()
+            act3_outage_shrink()
+    finally:
+        clk.close()
+    print("[gang] done")
+
+
+if __name__ == "__main__":
+    main()

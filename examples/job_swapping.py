@@ -85,8 +85,9 @@ def main() -> None:
               f"on {coord.asr.backend} (progress preserved across swaps)")
         assert coord.app.iteration > 0
     print("[swap] decision trace:")
-    for seq, op, name, backend, detail in sched.decision_trace():
-        print(f"[swap]   {seq:3d} {op:14s} {name:10s} {backend} {detail}")
+    for seq, op, name, backend, detail, trace_id in sched.decision_trace():
+        print(f"[swap]   {seq:3d} {op:14s} {name:10s} {backend} "
+              f"{detail} {trace_id}")
     sched.stop()
     replicator.stop()
     svc.shutdown()

@@ -35,6 +35,8 @@ EXACT_METRICS = {
     "survived",
     "replay_identical",
     "all_ok",
+    "restore_extra_fetches",      # gang reshard: single-flight CAS reads
+    "restored_ranks",             # gang shrink lands on exactly the floor
 }
 
 

@@ -285,6 +285,12 @@ class FaultyStore(ObjectStore):
     COMMITTED image fully loadable and the torn step invisible; the chaos
     suite (`tests/test_chaos.py`) holds the store to exactly that.
 
+    Arming takes an optional ``key_prefix``: only ops whose key starts
+    with it are faulted. Gang checkpointing writes each rank's chunks
+    under a rank-scoped CAS prefix (``<prefix>/cas/r<rank>-``), so a
+    prefix-armed fault hits exactly one rank's uploads mid-barrier —
+    the single-rank store-fault scenario of `tests/test_gang_chaos.py`.
+
     The wrapper *is* the store as far as the service is concerned: the
     inherited ``put_if_absent``/``delete_unreferenced`` run against the
     wrapper's counters, and every other op delegates to ``inner``.
@@ -296,28 +302,48 @@ class FaultyStore(ObjectStore):
         self._fault_lock = threading.Lock()
         self._put_faults = 0
         self._get_faults = 0
+        # key_prefix -> remaining faults, for per-rank (scoped) arming
+        self._put_prefix_faults: Dict[str, int] = {}
+        self._get_prefix_faults: Dict[str, int] = {}
         self.faults_injected = 0
 
-    def arm_put_errors(self, n: int) -> None:
+    def arm_put_errors(self, n: int, key_prefix: Optional[str] = None) -> None:
         with self._fault_lock:
-            self._put_faults = max(0, int(n))
+            if key_prefix is None:
+                self._put_faults = max(0, int(n))
+            else:
+                self._put_prefix_faults[key_prefix] = max(0, int(n))
 
-    def arm_get_errors(self, n: int) -> None:
+    def arm_get_errors(self, n: int, key_prefix: Optional[str] = None) -> None:
         with self._fault_lock:
-            self._get_faults = max(0, int(n))
+            if key_prefix is None:
+                self._get_faults = max(0, int(n))
+            else:
+                self._get_prefix_faults[key_prefix] = max(0, int(n))
 
     def disarm(self) -> None:
         with self._fault_lock:
             self._put_faults = 0
             self._get_faults = 0
+            self._put_prefix_faults.clear()
+            self._get_prefix_faults.clear()
 
     def armed(self) -> int:
         with self._fault_lock:
-            return self._put_faults + self._get_faults
+            return (self._put_faults + self._get_faults
+                    + sum(self._put_prefix_faults.values())
+                    + sum(self._get_prefix_faults.values()))
 
     def _maybe_fault(self, op: str, key: str) -> None:
         attr = f"_{op}_faults"
+        scoped = getattr(self, f"_{op}_prefix_faults")
         with self._fault_lock:
+            for pfx, left in scoped.items():
+                if left > 0 and key.startswith(pfx):
+                    scoped[pfx] = left - 1
+                    self.faults_injected += 1
+                    raise ChaosStorageError(
+                        f"injected {op} fault on {key!r} (scope {pfx!r})")
             if getattr(self, attr) > 0:
                 setattr(self, attr, getattr(self, attr) - 1)
                 self.faults_injected += 1

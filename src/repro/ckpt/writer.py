@@ -120,10 +120,15 @@ class _SaveContext:
     def __init__(self, store: ObjectStore, prefix: str, codec: str,
                  incremental: bool, known: Optional[Dict[str, int]],
                  raw_cache: Optional[Dict[str, Tuple[str, int]]],
-                 plane: DataPlaneConfig):
+                 plane: DataPlaneConfig, cas_scope: str = ""):
         self.store = store
         self.prefix = prefix
         self.codec = codec
+        # CAS key namespace tag: chunks land at <prefix>/cas/<scope><digest>.
+        # Gang saves scope each rank's uploads ("r<rank>-") so one rank's
+        # puts are distinguishable — per-rank fault injection and per-rank
+        # incremental dedup both key off it. "" = the classic shared space.
+        self.cas_scope = cas_scope
         self.incremental = incremental
         self.known = known
         self.raw_cache = raw_cache
@@ -181,9 +186,9 @@ def _encode_chunk(ctx: _SaveContext, step: int, name: str, off, shp,
             with ctx.lock:
                 digest, nbytes = ctx.raw_cache[rk]
             ctx.count_hit(nbytes)                # skipped encode AND put
-            return _Encoded(chunk=ChunkInfo(off, shp,
-                                            cas_key(ctx.prefix, digest),
-                                            nbytes, digest))
+            return _Encoded(chunk=ChunkInfo(
+                off, shp, cas_key(ctx.prefix, ctx.cas_scope + digest),
+                nbytes, digest))
     try:
         data = compression.encode(raw, host.dtype, ctx.codec)
     except BaseException:
@@ -206,7 +211,7 @@ def _upload_chunk(ctx: _SaveContext, enc: _Encoded) -> ChunkInfo:
         if ctx.put_flight.claim(digest, lambda: digest in ctx.known):
             try:
                 wrote = ctx.store.put_if_absent(
-                    cas_key(ctx.prefix, digest), enc.data)
+                    cas_key(ctx.prefix, ctx.cas_scope + digest), enc.data)
             except BaseException:
                 ctx.put_flight.abort(digest)     # a waiter may retry the put
                 raise
@@ -223,7 +228,8 @@ def _upload_chunk(ctx: _SaveContext, enc: _Encoded) -> ChunkInfo:
                 with ctx.lock:
                     ctx.raw_cache[enc.raw_key] = (digest, nbytes)
             ctx.raw_flight.done(enc.raw_key)
-    return ChunkInfo(enc.off, enc.shp, cas_key(ctx.prefix, digest),
+    return ChunkInfo(enc.off, enc.shp,
+                     cas_key(ctx.prefix, ctx.cas_scope + digest),
                      nbytes, digest)
 
 
@@ -269,6 +275,33 @@ def _run_pipeline(ctx: _SaveContext, plane: DataPlaneConfig, step: int,
             f.result()                               # join: all puts durable
 
 
+def upload_staged(ctx: _SaveContext, plane: DataPlaneConfig, step: int,
+                  staged) -> Dict[str, LeafInfo]:
+    """Encode + upload staged shards through the data plane; no commit.
+
+    Returns the leaf table with every put durably joined. The caller owns
+    the commit protocol — `_write_staged` commits immediately; the gang
+    writer (ckpt/gang.py) runs one of these per rank and commits a single
+    merged manifest only after *every* rank's uploads joined.
+    """
+    leaves: Dict[str, LeafInfo] = {}
+    tasks: List[tuple] = []
+    for name, kind, shape, dtype, shards in staged:
+        slots: List[Optional[ChunkInfo]] = [None] * len(shards)
+        leaves[name] = LeafInfo(name, shape, dtype, kind, slots)
+        for i, (off, shp, host) in enumerate(shards):
+            ctx.stats["chunks"] += 1
+            tasks.append((slots, i, name, off, shp, host, dtype))
+    if plane.serial_save:
+        for slots, i, name, off, shp, host, dtype in tasks:
+            enc = _encode_chunk(ctx, step, name, off, shp, host, dtype)
+            slots[i] = enc.chunk if enc.chunk is not None \
+                else _upload_chunk(ctx, enc)
+    else:
+        _run_pipeline(ctx, plane, step, tasks)
+    return leaves
+
+
 def _write_staged(store: ObjectStore, prefix: str, step: int, staged,
                   skeleton, codec: str, metadata: Dict[str, Any], *,
                   incremental: bool = True,
@@ -288,21 +321,7 @@ def _write_staged(store: ObjectStore, prefix: str, step: int, staged,
         known = known_digests(store, prefix, before_step=step)
     ctx = _SaveContext(store, prefix, codec, incremental, known, raw_cache,
                        plane)
-    leaves: Dict[str, LeafInfo] = {}
-    tasks: List[tuple] = []
-    for name, kind, shape, dtype, shards in staged:
-        slots: List[Optional[ChunkInfo]] = [None] * len(shards)
-        leaves[name] = LeafInfo(name, shape, dtype, kind, slots)
-        for i, (off, shp, host) in enumerate(shards):
-            ctx.stats["chunks"] += 1
-            tasks.append((slots, i, name, off, shp, host, dtype))
-    if plane.serial_save:
-        for slots, i, name, off, shp, host, dtype in tasks:
-            enc = _encode_chunk(ctx, step, name, off, shp, host, dtype)
-            slots[i] = enc.chunk if enc.chunk is not None \
-                else _upload_chunk(ctx, enc)
-    else:
-        _run_pipeline(ctx, plane, step, tasks)
+    leaves = upload_staged(ctx, plane, step, staged)
     manifest = Manifest(step=step, codec=codec, leaves=leaves,
                         skeleton=skeleton,
                         metadata={**metadata, "time": time.time(),

@@ -76,6 +76,11 @@ class ClusterSim:
         # denied until heal_outage() (the paper's cross-cloud failover
         # motivation — losing one entire cloud backend)
         self.in_outage = False
+        # per-VM message channels (gang checkpointing): host_id -> the
+        # in-flight messages addressed to it (sent, not yet received)
+        self._channels: Dict[str, List] = {}
+        self.messages_sent = 0
+        self.messages_received = 0
         for i in range(n_hosts):
             hid = f"{name}-host-{i:04d}"
             self._hosts[hid] = VirtualHost(host_id=hid)
@@ -124,6 +129,7 @@ class ClusterSim:
                     h.state = HostState.IDLE
                 h.owner = None
                 h.slowdown = 1.0
+                self._channels.pop(h.host_id, None)
                 # releasing a host must not punch a hole through a
                 # whole-cloud outage: the partition belongs to the cloud,
                 # not the owner
@@ -136,6 +142,10 @@ class ClusterSim:
         with self._lock:
             h = self._hosts[host_id]
             h.state = HostState.FAILED
+            # a crashed host loses its channel AND every undelivered
+            # message in it — the gang barrier must detect this, not
+            # wait forever on an in-flight counter that can't drain
+            self._channels.pop(host_id, None)
             listeners = list(self._failure_listeners)
         self._notify_fault("fail", host_id, 0.0)
         for cb in listeners:
@@ -234,8 +244,89 @@ class ClusterSim:
             return h.state == HostState.ALLOCATED and not h.partitioned
 
 
+    # ---- message transport (gang checkpointing) ------------------------
+    # Per-VM message channels with in-flight counters: the simulated
+    # TCP/InfiniBand fabric a distributed N-VM application exchanges
+    # messages over (paper §2: "parallel and distributed computations").
+    # A message is *in flight* from send until the destination host
+    # receives it; the gang barrier (core/gang.py) drains these counters
+    # to zero before snapshotting, so no message is lost in the cut —
+    # the Chandy-Lamport / DMTCP quiesce-and-drain step made concrete.
+    def channel_open(self, host_id: str) -> None:
+        with self._lock:
+            if host_id not in self._hosts:
+                raise KeyError(f"unknown host {host_id}")
+            self._channels.setdefault(host_id, [])
+
+    def channel_close(self, host_id: str) -> None:
+        with self._lock:
+            self._channels.pop(host_id, None)
+
+    def channel_send(self, src_host: str, dst_host: str, payload) -> None:
+        """Deliver ``payload`` into ``dst_host``'s channel (one fabric hop).
+
+        Raises :class:`ChannelError` when either endpoint is dead,
+        partitioned, or has no open channel — a partitioned rank cannot
+        talk to its peers, which is exactly what the gang barrier's
+        fault detection keys on."""
+        sim_sleep(self.cost.hop_latency_s)
+        with self._lock:
+            if not self._reachable_locked(src_host):
+                raise ChannelError(f"send from unreachable host {src_host}")
+            if not self._reachable_locked(dst_host):
+                raise ChannelError(f"send to unreachable host {dst_host}")
+            box = self._channels.get(dst_host)
+            if box is None:
+                raise ChannelError(f"no open channel on {dst_host}")
+            box.append(payload)
+            self.messages_sent += 1
+
+    def channel_probe(self, host_id: str) -> None:
+        """Control-plane ping over the fabric (one hop, delivers nothing).
+
+        The gang barrier probes each rank at every phase boundary: a
+        crashed or partitioned rank cannot echo, so the probe raises
+        :class:`ChannelError` and the epoch aborts instead of waiting on
+        an ack that can never arrive. Probes carry no payload so they
+        never pollute the in-flight counters the drain phase freezes."""
+        sim_sleep(self.cost.hop_latency_s)
+        with self._lock:
+            if not self._reachable_locked(host_id):
+                raise ChannelError(f"probe: host {host_id} unreachable")
+            if host_id not in self._channels:
+                raise ChannelError(f"probe: no open channel on {host_id}")
+
+    def channel_recv(self, host_id: str) -> List:
+        """Drain and return every message currently in the host's channel
+        (empties the in-flight counter for those messages)."""
+        with self._lock:
+            box = self._channels.get(host_id)
+            if box is None:
+                return []
+            got, self._channels[host_id] = box, []
+            self.messages_received += len(got)
+            return got
+
+    def channel_inflight(self, host_ids: Optional[List[str]] = None) -> int:
+        """Messages sent but not yet received, summed over ``host_ids``
+        (None = every open channel) — the gang drain-phase barrier
+        condition is this hitting zero."""
+        with self._lock:
+            ids = self._channels.keys() if host_ids is None else host_ids
+            return sum(len(self._channels.get(h, ())) for h in ids)
+
+    def _reachable_locked(self, host_id: str) -> bool:
+        h = self._hosts.get(host_id)
+        return (h is not None and h.state == HostState.ALLOCATED
+                and not h.partitioned)
+
+
 class CapacityError(RuntimeError):
     pass
+
+
+class ChannelError(RuntimeError):
+    """A message-transport endpoint is unreachable (crash / partition)."""
 
 
 def fresh_id(kind: str) -> str:

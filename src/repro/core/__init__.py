@@ -9,12 +9,16 @@ Public surface:
   * ``migration``         — clone / migrate / cloudify (paper §5.3, §7.3)
 """
 from repro.core.application import Application, AppContext, SimulatedApp
-from repro.core.chaos import (ChaosController, ChaosHealthHook, FaultEvent,
-                              FaultKind, FaultOutcome, FaultSchedule,
-                              ScenarioResult, run_scenario)
+from repro.core.chaos import (GANG_KINDS, ChaosController, ChaosHealthHook,
+                              FaultEvent, FaultKind, FaultOutcome,
+                              FaultSchedule, ScenarioResult,
+                              run_gang_scenario, run_scenario)
 from repro.core.coordinator import (ASR, CheckpointPolicy, Coordinator,
                                     CoordinatorDB, CoordState,
                                     InvalidTransition)
+from repro.core.gang import (BarrierConfig, GangApp, GangBarrierError,
+                             GangCoordinator, GangStragglerError,
+                             gang_invariant)
 from repro.core.migration import clone, cloudify, migrate, MigrationResult
 from repro.core.replication import (FailoverController, FailoverResult,
                                     FailoverScenarioResult, ImageReplicator,
@@ -30,6 +34,9 @@ __all__ = [
     "InvalidTransition",
     "ChaosController", "ChaosHealthHook", "FaultEvent", "FaultKind",
     "FaultOutcome", "FaultSchedule", "ScenarioResult", "run_scenario",
+    "GANG_KINDS", "run_gang_scenario",
+    "BarrierConfig", "GangApp", "GangBarrierError", "GangCoordinator",
+    "GangStragglerError", "gang_invariant",
     "clone", "cloudify", "migrate", "MigrationResult",
     "FailoverController", "FailoverResult", "FailoverScenarioResult",
     "ImageReplicator", "ReplicationPolicy", "StandbyTarget",

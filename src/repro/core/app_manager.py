@@ -25,6 +25,7 @@ from repro.core.cloud_manager import CloudManager
 from repro.sim.simtime import active_clock
 from repro.core.coordinator import (ASR, Coordinator, CoordinatorDB,
                                     CoordState, InvalidTransition)
+from repro.core.gang import GANG_ROUTED, GANG_SHARDED, GangCoordinator
 from repro.core.monitoring import MonitoringManager
 from repro.core.provision import ProvisionManager
 
@@ -58,6 +59,10 @@ class AppManager:
         # get error mid-recovery should cost a retry, not an ERROR state)
         self.recover_retries = recover_retries
         self.retry_backoff_s = retry_backoff_s
+        # per-coordinator gang barrier drivers (core/gang.py), kept across
+        # restarts so epoch/abort counters and armed chaos hooks survive
+        # a recovery — rebound to the restarted app at each use
+        self._gangs: Dict[str, GangCoordinator] = {}
 
     # ------------------------------------------------------------------
     # Submission (paper §5.1)
@@ -125,7 +130,11 @@ class AppManager:
         asr = coord.asr
         if coord.app is None:
             coord.app = asr.app_factory()
+        backend = self.cloud.backend(asr.backend)
         ctx = AppContext(coord.coord_id, coord.vms, service=None)
+        # gang apps exchange messages over the backend's simulated fabric;
+        # handing it through the context keeps Application signature-stable
+        ctx.transport = getattr(backend, "sim", None)
         coord.app.start(ctx, restore_state)
         try:
             self.db.transition(coord, CoordState.RUNNING)
@@ -134,7 +143,6 @@ class AppManager:
             # the terminating thread (which joins us) release the resources
             coord.app.stop()
             return False
-        backend = self.cloud.backend(asr.backend)
         native = backend.supports_failure_notifications
         hook = asr.health_hook or (lambda: coord.app.healthy())
         self.monitor.watch(coord.coord_id, coord.vms, hook, native)
@@ -145,6 +153,45 @@ class AppManager:
         return True
 
     # ------------------------------------------------------------------
+    # Gang jobs (core/gang.py): barrier driver plumbing
+    # ------------------------------------------------------------------
+    def gang(self, coord_id: str) -> Optional[GangCoordinator]:
+        """The job's barrier driver (tests arm chaos hooks through it)."""
+        return self._gangs.get(coord_id)
+
+    def _gang(self, coord: Coordinator) -> GangCoordinator:
+        transport = getattr(self.cloud.backend(coord.asr.backend), "sim",
+                            None)
+
+        def save_fn(step, trees):
+            return self.ckpt.save_gang(coord, step, trees,
+                                       sharded=GANG_SHARDED,
+                                       routed=GANG_ROUTED)
+
+        g = self._gangs.get(coord.coord_id)
+        if g is None:
+            g = GangCoordinator(coord.app, transport, save_fn,
+                                trace_id=coord.trace_id)
+            self._gangs[coord.coord_id] = g
+        else:
+            # the app instance / backend may have changed across a
+            # recovery or cross-cloud retarget — repoint, keep counters
+            g.rebind(coord.app, transport)
+            g.save_fn = save_fn
+        return g
+
+    def _gang_snapshot(self, coord: Coordinator, step: int) -> None:
+        """One barrier epoch; mirrors the driver's counters into the
+        coordinator record so traces/metrics survive the driver."""
+        g = self._gang(coord)
+        try:
+            g.snapshot(step)
+        finally:
+            coord.metrics.update(
+                gang_epochs=g.epochs_committed, gang_aborts=g.aborts,
+                gang_last_abort=g.last_abort_reason or "")
+
+    # ------------------------------------------------------------------
     # Checkpointing (paper §5.2: user-initiated / periodic / app-initiated)
     # ------------------------------------------------------------------
     def checkpoint_now(self, coord_id: str, *, blocking: bool = True) -> int:
@@ -153,12 +200,19 @@ class AppManager:
             if coord.state not in (CoordState.RUNNING, CoordState.READY):
                 raise RuntimeError(
                     f"cannot checkpoint in state {coord.state.value}")
-            state = coord.app.checkpoint_state()
+            # a gang snapshot is cut by the barrier (quiesce + drain), not
+            # by reading app state under the lock — only the step number
+            # is claimed here
+            state = None if coord.asr.gang else coord.app.checkpoint_state()
             # claim the step under the lock: a concurrent suspend (or a
             # second checkpoint_now) must not mint the same step number
             step = self._step_counter.get(coord_id, 0) + 1
             self._step_counter[coord_id] = step
-        self.ckpt.save(coord, step, state, blocking=blocking)
+        if coord.asr.gang:
+            # blocking by nature: the ranks stay quiesced until committed
+            self._gang_snapshot(coord, step)
+        else:
+            self.ckpt.save(coord, step, state, blocking=blocking)
         return step
 
     def start_checkpoint_daemon(self, tick_s: float = 0.02) -> None:
@@ -328,11 +382,24 @@ class AppManager:
                 latest = self.ckpt.latest(coord)
                 if latest is None:
                     return None
-                return self.ckpt.load(coord, latest)
+                return self._load_state(coord, latest)
             except Exception:                      # noqa: BLE001
                 if attempt >= self.recover_retries:
                     raise
                 active_clock().sleep(self.retry_backoff_s * (attempt + 1))
+
+    def _load_state(self, coord: Coordinator, step: Optional[int] = None):
+        """Restore-path dispatch: gang images reshard onto however many
+        VMs the coordinator holds NOW (shrink-restore after an outage
+        lands on fewer ranks than the image was cut from)."""
+        if not coord.asr.gang:
+            return self.ckpt.load(coord, step)
+        n = len(coord.vms) or coord.asr.n_vms
+        trees, _man, stats = self.ckpt.load_gang(coord, step, n_ranks=n)
+        coord.metrics["gang_restore_ranks"] = n
+        coord.metrics["gang_restore_fetches"] = stats["chunk_fetches"]
+        coord.metrics["gang_restore_unique"] = stats["unique_chunks"]
+        return trees
 
     def restart_from(self, coord_id: str, step: Optional[int] = None) -> None:
         """POST /coordinators/:id/checkpoints/:id — restart from an image.
@@ -377,7 +444,7 @@ class AppManager:
                 coord.coord_id)
             self.provision.provision(coord.vms, coord.asr.provision_cmds,
                                      **self._provision_cost(coord.asr.backend))
-        state = self.ckpt.load(coord, step)
+        state = self._load_state(coord, step)
         # seed from the NEWEST committed image (not the restored one): a
         # user restarting from an earlier image must not have the next
         # save clobber the newer images still in the store
@@ -392,15 +459,20 @@ class AppManager:
         with coord.lock:
             if coord.state != CoordState.RUNNING:
                 raise RuntimeError(f"cannot suspend {coord.state.value}")
-            state = coord.app.checkpoint_state()
+            state = None if coord.asr.gang else coord.app.checkpoint_state()
             step = self._step_counter.get(coord_id, 0) + 1
             self._step_counter[coord_id] = step
         # The blocking swap-out write runs OUTSIDE coord.lock: holding the
         # lock across a full save would stall checkpoint_now, the periodic
         # daemon and monitor-event handling for this coordinator for the
-        # whole write. The snapshot above is already step-consistent.
-        self.ckpt.save(coord, step, state, blocking=True,
-                       metadata={"suspend": reason})
+        # whole write. The snapshot above is already step-consistent (for
+        # a gang job the barrier cuts it here instead — an epoch abort
+        # fails the suspend with the job still RUNNING and unharmed).
+        if coord.asr.gang:
+            self._gang_snapshot(coord, step)
+        else:
+            self.ckpt.save(coord, step, state, blocking=True,
+                           metadata={"suspend": reason})
         with coord.lock:
             if coord.state != CoordState.RUNNING:
                 # a recovery/terminate won the race during the write; the
@@ -461,7 +533,7 @@ class AppManager:
             try:
                 self.provision.provision(coord.vms, asr.provision_cmds,
                                          **self._provision_cost(asr.backend))
-                state = self.ckpt.load(coord)
+                state = self._load_state(coord)
                 self._seed_step_counter(coord)
                 self._start_app(coord, state)
             except Exception as e:                 # noqa: BLE001
@@ -497,6 +569,7 @@ class AppManager:
             coord.vms = []
         if delete_images:
             self.ckpt.delete_all(coord)
+        self._gangs.pop(coord_id, None)
         self.db.transition(coord, CoordState.TERMINATED)
         final = coord.to_dict()
         self.db.remove(coord_id)          # paper §5.4: delete the db entry

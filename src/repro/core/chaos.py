@@ -70,17 +70,36 @@ class FaultKind(str, enum.Enum):
     # seeded schedules (rng.choice over the earlier kinds) replay
     # unchanged.
     CLOUD_OUTAGE = "cloud_outage"
+    # gang-barrier faults: armed as one-shot hooks on the job's
+    # GangCoordinator and fired at a protocol phase boundary — the fault
+    # lands at an exact protocol position, not a timing race, which is
+    # what makes mid-barrier chaos replayable. Each must abort the epoch
+    # all-or-nothing: no torn gang image, previous image restorable,
+    # every rank released. Appended after CLOUD_OUTAGE for the same
+    # seed-replay reason.
+    GANG_BARRIER_CRASH = "gang_barrier_crash"
+    GANG_BARRIER_PARTITION = "gang_barrier_partition"
+    GANG_BARRIER_STRAGGLER = "gang_barrier_straggler"
+    GANG_BARRIER_PUT_FAULT = "gang_barrier_put_fault"
 
 
 # kinds whose outcome is a full recovery cycle back to RUNNING
 _RECOVERY_KINDS = (FaultKind.VM_CRASH, FaultKind.APP_FAILURE,
                    FaultKind.MONITOR_PARTITION, FaultKind.STORAGE_GET_FAULT)
 
+# gang-barrier kinds: only meaningful for a gang job (asr.gang=True);
+# settled by _settle_gang, never part of the default generate pool
+GANG_KINDS = (FaultKind.GANG_BARRIER_CRASH, FaultKind.GANG_BARRIER_PARTITION,
+              FaultKind.GANG_BARRIER_STRAGGLER,
+              FaultKind.GANG_BARRIER_PUT_FAULT)
+
 # kinds a single-cloud scenario can survive — the default pool for
 # FaultSchedule.generate (CLOUD_OUTAGE needs a standby cloud to end well,
-# so it must be opted into explicitly)
+# and gang kinds need a gang job, so both must be opted into explicitly;
+# keeping them out also keeps rng.choice draws identical for old seeds)
 SINGLE_CLOUD_KINDS = tuple(k for k in FaultKind
-                           if k is not FaultKind.CLOUD_OUTAGE)
+                           if k is not FaultKind.CLOUD_OUTAGE
+                           and k not in GANG_KINDS)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -92,6 +111,7 @@ class FaultEvent:
     slowdown: float = 20.0       # HOST_SLOWDOWN: step-time multiplier
     n_ops: int = 1               # STORAGE_*: how many ops fail
     n_vms: int = 1               # MONITOR_PARTITION: subtree size
+    phase: str = "drain"         # GANG_BARRIER_*: protocol phase to hit
 
     def label(self) -> str:
         return f"{self.kind.value}@{self.at_s:.1f}s/vm{self.vm_index}"
@@ -165,6 +185,7 @@ class FaultOutcome:
     mttr_s: Optional[float] = None        # inject → back up (end to end)
     recoveries: int = 0
     detail: str = ""
+    trace_id: str = ""                    # job trace id (deterministic)
 
     def trace_key(self) -> Tuple:
         """Wall-time-free identity of this outcome, for replay equality.
@@ -202,6 +223,7 @@ class ScenarioResult:
             "outcomes": [{
                 "fault": o.event.kind.value, "ok": o.ok,
                 "final_state": o.final_state, "detail": o.detail,
+                "trace_id": o.trace_id,
                 "detection_s": o.detection_s, "restore_s": o.restore_s,
                 "mttr_s": o.mttr_s} for o in self.outcomes],
         }
@@ -284,6 +306,7 @@ class ChaosController:
         self.scheduler = scheduler
         self.outcomes: List[FaultOutcome] = []
         self.sim_faults: List[Tuple[str, str, float]] = []
+        self._gang_heal = None         # undo for the current gang fault
         backend.sim.on_fault(
             lambda kind, host, value: self.sim_faults.append(
                 (kind, host, value)))
@@ -316,7 +339,8 @@ class ChaosController:
         if not self._wait(lambda: coord.state == CoordState.RUNNING):
             self.outcomes.append(FaultOutcome(
                 ev, ok=False, final_state=coord.state.value,
-                detail="not RUNNING at inject time"))
+                detail="not RUNNING at inject time",
+                trace_id=coord.trace_id))
             return
         h0 = len(coord.history)
         rec0 = coord.recoveries
@@ -327,7 +351,8 @@ class ChaosController:
         except Exception as e:                     # noqa: BLE001
             self.outcomes.append(FaultOutcome(
                 ev, ok=False, final_state=coord.state.value,
-                detail=f"inject failed: {type(e).__name__}"))
+                detail=f"inject failed: {type(e).__name__}",
+                trace_id=coord.trace_id))
             return
         if self.scheduler is not None:
             self.scheduler.kick("chaos")
@@ -372,6 +397,49 @@ class ChaosController:
         self.store.arm_put_errors(ev.n_ops)
         return f"put-faults:{ev.n_ops}"
 
+    def _gang_ctl(self):
+        g = self.service.apps.gang(self.coord_id)
+        if g is None:
+            raise ValueError("gang faults need a gang job (asr.gang=True) "
+                             "with at least one snapshot taken")
+        return g
+
+    def _inject_gang_barrier_crash(self, ev: FaultEvent, coord) -> str:
+        g = self._gang_ctl()
+        hid = coord.vms[ev.vm_index % len(coord.vms)].host.host_id
+        g.arm(ev.phase, lambda: self.backend.sim.fail_host(hid))
+        return f"crash@{ev.phase}"
+
+    def _inject_gang_barrier_partition(self, ev: FaultEvent, coord) -> str:
+        g = self._gang_ctl()
+        hid = coord.vms[ev.vm_index % len(coord.vms)].host.host_id
+        g.arm(ev.phase, lambda: self.backend.sim.partition_host(hid))
+        return f"partition@{ev.phase}"
+
+    def _inject_gang_barrier_straggler(self, ev: FaultEvent, coord) -> str:
+        # a degrade armed at quiesce entry would land too late — the rank
+        # checks the pause flag before each sleep and would still ack in
+        # time. Degrade now and let the rank ENTER its slowed iteration
+        # before the settle phase raises the barrier; only a slowdown
+        # that outsleeps the whole ack budget (timeout × retries +
+        # backoffs) then reads as a straggler.
+        self._gang_ctl()                   # validate: gang job, primed
+        hid = coord.vms[ev.vm_index % len(coord.vms)].host.host_id
+        self.backend.sim.degrade_host(hid, ev.slowdown)
+        active_clock().paper_sleep(1.0)
+        self._gang_heal = lambda: self.backend.sim.degrade_host(hid, 1.0)
+        return f"straggler:{ev.slowdown:g}"
+
+    def _inject_gang_barrier_put_fault(self, ev: FaultEvent, coord) -> str:
+        if self.store is None:
+            raise ValueError("storage faults need a FaultyStore")
+        g = self._gang_ctl()
+        rank = ev.vm_index % len(coord.vms)
+        scope = f"{coord.ckpt_prefix}/cas/r{rank}-"
+        g.arm("save", lambda: self.store.arm_put_errors(ev.n_ops,
+                                                        key_prefix=scope))
+        return f"put-faults:r{rank}x{ev.n_ops}"
+
     def _inject_storage_get_fault(self, ev: FaultEvent, coord) -> str:
         if self.store is None:
             raise ValueError("storage faults need a FaultyStore")
@@ -393,6 +461,9 @@ class ChaosController:
         if ev.kind == FaultKind.CLOUD_OUTAGE:
             self._settle_cloud_outage(ev, coord, h0, t_inj, detail)
             return
+        if ev.kind in GANG_KINDS:
+            self._settle_gang(ev, coord, h0, rec0, t_inj, detail)
+            return
         if ev.kind == FaultKind.HOST_SLOWDOWN:
             ok_end = self._wait(
                 lambda: coord.state == CoordState.SUSPENDED)
@@ -407,7 +478,8 @@ class ChaosController:
         self.outcomes.append(FaultOutcome(
             ev, ok=bool(ok_end), final_state=coord.state.value,
             detection_s=detection, restore_s=restore, mttr_s=mttr,
-            recoveries=coord.recoveries, detail=detail))
+            recoveries=coord.recoveries, detail=detail,
+            trace_id=coord.trace_id))
 
     def _settle_cloud_outage(self, ev: FaultEvent, coord, h0: int,
                              t_inj: float, detail: str) -> None:
@@ -450,7 +522,75 @@ class ChaosController:
         self.outcomes.append(FaultOutcome(
             ev, ok=bool(ok), final_state=coord.state.value,
             detection_s=detection, restore_s=restore, mttr_s=mttr,
-            recoveries=coord.recoveries, detail=detail))
+            recoveries=coord.recoveries, detail=detail,
+            trace_id=coord.trace_id))
+
+    def _settle_gang(self, ev: FaultEvent, coord, h0: int, rec0: int,
+                     t_inj: float, detail: str) -> None:
+        """Armed gang faults fire inside the next snapshot's barrier:
+        trigger it, prove the epoch aborted all-or-nothing (the torn step
+        stays invisible, the previous committed gang image is still
+        restorable at full rank count), then prove the plane heals — for
+        crash/partition through the normal recovery cycle (replace +
+        gang restore), otherwise by the very next snapshot committing."""
+        g = self._gang_ctl()
+        aborts0, commits0 = g.aborts, g.epochs_committed
+        latest0 = self.service.ckpt.latest(coord)
+        snapshot_failed = False
+        try:
+            self.service.trigger_checkpoint(self.coord_id)
+        except Exception:                      # noqa: BLE001
+            snapshot_failed = True
+        if self.store is not None:
+            self.store.disarm()
+        heal, self._gang_heal = self._gang_heal, None
+        ok = snapshot_failed and g.aborts == aborts0 + 1
+        note = f"abort={g.last_abort_reason}"
+        try:
+            latest1 = self.service.ckpt.latest(coord)
+            if latest1 != latest0:
+                ok, note = False, note + ";torn image visible"
+            elif latest0 is not None:
+                n = len(coord.vms) or coord.asr.n_vms
+                self.service.ckpt.load_gang(coord, latest0, n_ranks=n)
+        except Exception as e:                 # noqa: BLE001
+            ok, note = False, note + f";restore failed: {type(e).__name__}"
+        if ev.kind in (FaultKind.GANG_BARRIER_CRASH,
+                       FaultKind.GANG_BARRIER_PARTITION):
+            # the fabric fault outlives the barrier: the monitor must now
+            # drive a normal recovery cycle off the intact previous image
+            got = self._wait(lambda: (coord.recoveries > rec0
+                                      and coord.state == CoordState.RUNNING))
+            ok = ok and got
+            if not got:
+                note += ";recovery failed"
+        else:
+            if heal is not None:
+                heal()
+            # healing a degraded host does not shorten a slow sleep the
+            # rank already entered (its duration was computed at sleep
+            # start), so the first resnapshot may still hit a stale
+            # straggler — retry across that drain window
+            err: Optional[Exception] = None
+            for _ in range(4):
+                try:
+                    self.service.trigger_checkpoint(self.coord_id)
+                    err = None
+                    break
+                except Exception as e:         # noqa: BLE001
+                    err = e
+                    active_clock().paper_sleep(5.0)
+            if err is not None:
+                ok, note = (False,
+                            note + f";resnapshot failed: {type(err).__name__}")
+            elif g.epochs_committed <= commits0:
+                ok, note = False, note + ";resnapshot did not commit"
+        detection, restore, mttr = self._measure(ev, coord, h0, t_inj)
+        self.outcomes.append(FaultOutcome(
+            ev, ok=bool(ok), final_state=coord.state.value,
+            detection_s=detection, restore_s=restore, mttr_s=mttr,
+            recoveries=coord.recoveries,
+            detail=f"{detail};{note}", trace_id=coord.trace_id))
 
     def _settle_put_fault(self, ev: FaultEvent, coord, detail: str) -> None:
         """A save must fail without tearing anything: force a checkpoint
@@ -477,7 +617,8 @@ class ChaosController:
         self.outcomes.append(FaultOutcome(
             ev, ok=ok, final_state=coord.state.value,
             recoveries=coord.recoveries,
-            detail=f"{detail};save_failed={save_failed};{note}"))
+            detail=f"{detail};save_failed={save_failed};{note}",
+            trace_id=coord.trace_id))
 
     def _measure(self, ev: FaultEvent, coord, h0: int, t_inj: float):
         """Detection / restore / MTTR from the coordinator history.
@@ -541,6 +682,54 @@ def run_scenario(schedule: FaultSchedule, *, backend_cls=None,
         ctrl = ChaosController(svc, cid, backend, schedule, store=store,
                                hook=hook, settle_timeout_s=settle_timeout_s,
                                resume_stragglers=resume_stragglers)
+        outcomes = ctrl.run()
+        coord = svc.db.get(cid)
+        return ScenarioResult(
+            seed=schedule.seed,
+            trace=[o.trace_key() for o in outcomes],
+            sim_faults=list(ctrl.sim_faults),
+            outcomes=outcomes,
+            final_state=coord.state.value,
+            recoveries=coord.recoveries,
+            events_deduped=svc.apps.events_deduped,
+            partition_fallbacks=svc.apps.monitor.partition_fallbacks)
+    finally:
+        svc.shutdown()
+
+
+def run_gang_scenario(schedule: FaultSchedule, *, n_hosts: int = 8,
+                      n_vms: int = 4, min_vms: int = 2,
+                      global_rows: int = 16, iter_time_s: float = 0.05,
+                      keep_last: int = 3,
+                      settle_timeout_s: float = 60.0) -> ScenarioResult:
+    """Gang variant of :func:`run_scenario`: one multi-VM gang job
+    (``asr.gang=True``) on a fresh simulator, with a first committed gang
+    image taken before the schedule runs — GANG_BARRIER_* events arm
+    their hooks on the job's GangCoordinator and fire inside the next
+    snapshot's barrier."""
+    from repro.clusters import SnoozeBackend
+    from repro.core.gang import GangApp
+    from repro.core.service import CACSService
+
+    backend = SnoozeBackend(n_hosts=n_hosts)
+    store = FaultyStore(InMemoryStore())
+    svc = CACSService({backend.name: backend}, {"default": store})
+    asr = ASR(name=f"gang-{schedule.seed}", n_vms=n_vms,
+              backend=backend.name,
+              app_factory=lambda: GangApp(global_rows=global_rows,
+                                          iter_time_s=iter_time_s),
+              policy=CheckpointPolicy(period_s=0.0, keep_last=keep_last),
+              gang=True, min_vms=min_vms,
+              # the scenario measures the BARRIER's straggler handling;
+              # the monitor's proactive swap-out would race it (two
+              # policies fighting over the same degraded host)
+              straggler_action="ignore")
+    cid = svc.submit(asr)
+    try:
+        svc.wait_for_state(cid, CoordState.RUNNING, timeout=60)
+        svc.trigger_checkpoint(cid)    # first committed gang image exists
+        ctrl = ChaosController(svc, cid, backend, schedule, store=store,
+                               settle_timeout_s=settle_timeout_s)
         outcomes = ctrl.run()
         coord = svc.db.get(cid)
         return ScenarioResult(

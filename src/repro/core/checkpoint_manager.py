@@ -14,6 +14,7 @@ import time
 from typing import Any, Dict, List, Optional
 
 from repro.ckpt import gc as ckpt_gc
+from repro.ckpt.gang import GangCheckpointer, load_gang_ranks
 from repro.ckpt.plane import DataPlaneConfig, shared_executor
 from repro.ckpt.reader import (latest_step, list_steps, load_manifest,
                                restore)
@@ -27,6 +28,7 @@ class CheckpointManager:
                  plane: Optional[DataPlaneConfig] = None):
         self._stores = dict(stores)
         self._async: Dict[str, AsyncCheckpointer] = {}
+        self._gangs: Dict[str, GangCheckpointer] = {}
         self._lock = threading.Lock()
         # service-wide default for the parallel checkpoint data plane;
         # CheckpointPolicy.plane overrides per application
@@ -97,6 +99,47 @@ class CheckpointManager:
                     plane=self._plane_for(coord))
             return self._async[coord.coord_id]
 
+    # ---- gang images (core/gang.py barrier protocol) -------------------
+    def save_gang(self, coord: Coordinator, step: int, rank_trees: List[Any],
+                  *, sharded: Dict[str, int],
+                  routed: Optional[Dict[str, Dict[str, Any]]] = None,
+                  metadata: Optional[Dict[str, Any]] = None) -> Any:
+        """Commit one all-or-nothing gang image (called from inside the
+        barrier's SAVE phase — blocking by construction: the ranks stay
+        quiesced until every chunk joined and the marker is durable).
+        Raises without side effects beyond orphan chunks on any rank's
+        storage fault; the barrier turns that into an epoch abort."""
+        pol = coord.asr.policy
+        store = self.store(pol.store)
+        ck = self._gang_checkpointer(coord)
+        meta = {"app": coord.asr.name, "trace_id": coord.trace_id,
+                **(metadata or {})}
+        manifest = ck.save(step, rank_trees, sharded=sharded, routed=routed,
+                           metadata=meta)
+        if pol.keep_last:
+            ckpt_gc.collect(store, coord.ckpt_prefix, keep_last=pol.keep_last,
+                            keep_every=pol.keep_every, on_swept=ck.invalidate)
+        return manifest
+
+    def load_gang(self, coord: Coordinator, step: Optional[int] = None, *,
+                  n_ranks: Optional[int] = None) -> Any:
+        """(per-rank trees, manifest, fetch stats) resharded onto
+        ``n_ranks`` — the restore half of elastic shrink/grow."""
+        return load_gang_ranks(self.store(coord.asr.policy.store),
+                               coord.ckpt_prefix, step, n_ranks,
+                               plane=self._plane_for(coord))
+
+    def _gang_checkpointer(self, coord: Coordinator) -> GangCheckpointer:
+        with self._lock:
+            ck = self._gangs.get(coord.coord_id)
+            if ck is None:
+                pol = coord.asr.policy
+                ck = GangCheckpointer(self.store(pol.store),
+                                      coord.ckpt_prefix, codec=pol.codec,
+                                      plane=self._plane_for(coord))
+                self._gangs[coord.coord_id] = ck
+            return ck
+
     def detach(self, coord_id: str) -> None:
         """Forget the coordinator's cached async writer, draining any
         in-flight save first. Required when a coordinator is *retargeted*
@@ -106,7 +149,8 @@ class CheckpointManager:
         cloud."""
         with self._lock:
             ck = self._async.pop(coord_id, None)
-        if ck is not None:
+            self._gangs.pop(coord_id, None)  # gang writers are synchronous
+        if ck is not None:                   # (barrier-held): drop is safe
             # drain without raising: a failed in-flight save is already
             # consumed by the suspend/recovery path; detaching only needs
             # quiescence before the writer is rebound to the new store
@@ -242,15 +286,19 @@ class CheckpointManager:
         store = self.store(coord.asr.policy.store)
         with self._lock:
             ck = self._async.get(coord.coord_id)
+            gck = self._gangs.get(coord.coord_id)
 
         def _delete():
             store.delete_prefix(step_prefix(coord.ckpt_prefix, step))
             # chunks may be shared with surviving steps — sweep, don't
             # prefix-delete
             swept = ckpt_gc.sweep_orphans(store, coord.ckpt_prefix)
-            if ck is not None and swept:
-                ck.invalidate(swept)     # a stale dedup hit would commit a
-        if ck is not None:               # manifest pointing at reaped chunks
+            if swept:
+                if ck is not None:
+                    ck.invalidate(swept)  # a stale dedup hit would commit a
+                if gck is not None:       # manifest pointing at reaped chunks
+                    gck.invalidate(swept)
+        if ck is not None:
             # serialize with in-flight saves: sweeping concurrently could
             # reap chunks a save has put but not yet committed
             ck.run_serialized(_delete)
@@ -260,6 +308,7 @@ class CheckpointManager:
     def delete_all(self, coord: Coordinator) -> None:
         with self._lock:
             ck = self._async.pop(coord.coord_id, None)
+            self._gangs.pop(coord.coord_id, None)
         if ck is not None:
             ck.close()                   # drain in-flight save first, or it
         self.store(coord.asr.policy.store).delete_prefix(coord.ckpt_prefix)

@@ -92,6 +92,18 @@ class ASR:
     clouds: tuple = ()
     provision_cmds: tuple = ()       # user-defined provisioning hooks
     health_hook: Optional[Callable[[], bool]] = None
+    # Gang job: the application is an N-rank distributed computation whose
+    # snapshots must be gang-consistent (core/gang.py barrier protocol).
+    # Placement is all-or-nothing: the scheduler never starts a gang on
+    # fewer than min_vms ranks, and only shrinks below n_vms when the job
+    # already holds a gang image to reshard from (elastic shrink-restore).
+    gang: bool = False
+    min_vms: int = 0                 # 0 = full n_vms required
+    # What the monitor does when it detects a straggling host (paper use
+    # case 3): "suspend" proactively swaps the job out; "ignore" leaves
+    # handling to the application — gang jobs often prefer "ignore" so the
+    # barrier's own straggler abort isn't raced by a concurrent swap-out.
+    straggler_action: str = "suspend"
 
 
 @dataclasses.dataclass
@@ -112,6 +124,13 @@ class Coordinator:
     # coordinator adopt an already-replicated image lineage with zero
     # chunk copies, and continue appending to it after failover.
     ckpt_prefix_override: Optional[str] = None
+    # Per-job trace id threaded through every control-plane record touching
+    # this job (scheduler decision_trace rows, chaos outcomes, replication
+    # stats) so one gang lifecycle is debuggable from a single grep. It is
+    # DETERMINISTIC — derived from the DB's creation sequence, not a uuid —
+    # because seeded chaos tests compare traces across replays for
+    # bit-for-bit equality.
+    trace_id: str = ""
     lock: threading.RLock = dataclasses.field(default_factory=threading.RLock,
                                               repr=False)
 
@@ -123,9 +142,12 @@ class Coordinator:
         return {
             "id": self.coord_id,
             "name": self.asr.name,
+            "trace_id": self.trace_id,
             "state": self.state.value,
             "backend": self.asr.backend,
             "n_vms": self.asr.n_vms,
+            "gang": self.asr.gang,
+            "min_vms": self.asr.min_vms,
             "vms": [vm.vm_id for vm in self.vms],
             "priority": self.asr.priority,
             "clouds": list(self.asr.clouds),
@@ -167,6 +189,7 @@ class CoordinatorDB:
         self._lock = threading.RLock()
         self._coords: Dict[str, Coordinator] = {}
         self._store = store
+        self._created = 0            # trace_id sequence (deterministic)
 
     def load(self) -> List[Coordinator]:
         """Rehydrate persisted coordinator records from the object store.
@@ -197,14 +220,17 @@ class CoordinatorDB:
                           keep_every=pol.get("keep_every", 0),
                           store=pol.get("store", "default")),
                       priority=d.get("priority", 0),
-                      clouds=tuple(d.get("clouds", ())))
+                      clouds=tuple(d.get("clouds", ())),
+                      gang=d.get("gang", False),
+                      min_vms=d.get("min_vms", 0))
             coord = Coordinator(
                 coord_id=d["id"], asr=asr,
                 state=CoordState(d["state"]),
                 history=[(t, s) for t, s in d.get("history", [])],
                 error=d.get("error"),
                 recoveries=d.get("recoveries", 0),
-                metrics=dict(d.get("metrics", {})))
+                metrics=dict(d.get("metrics", {})),
+                trace_id=d.get("trace_id", ""))
             prefix = d.get("ckpt_prefix")
             if prefix and prefix != f"apps/{coord.coord_id}":
                 coord.ckpt_prefix_override = prefix
@@ -217,6 +243,10 @@ class CoordinatorDB:
         coord = Coordinator(coord_id=fresh_id("coord"), asr=asr)
         coord.history.append((active_clock().timestamp(), coord.state.value))
         with self._lock:
+            # trace_id is a pure function of (submission order, job name) so
+            # a replayed seeded scenario produces byte-identical traces
+            coord.trace_id = f"tr-{asr.name}-{self._created:04d}"
+            self._created += 1
             self._coords[coord.coord_id] = coord
         self._persist(coord)
         return coord

@@ -305,6 +305,14 @@ class ImageReplicator:
         # chunks, COMMITTED after the manifest — a crash mid-replication
         # leaves an invisible partial image that the next pass completes
         sp = step_prefix(prefix, step)
+        gang = man.metadata.get("gang")
+        if gang:                               # per-rank sub-manifests ride
+            for r in range(int(gang.get("ranks", 0))):   # along (diagnostic)
+                try:
+                    dst.put(f"{sp}/rank_{r}.json",
+                            src.get(f"{sp}/rank_{r}.json"))
+                except Exception:              # noqa: BLE001
+                    pass                       # restore needs only the merge
         dst.put(f"{sp}/{MANIFEST}", src.get(f"{sp}/{MANIFEST}"))
         dst.flush()
         dst.put(f"{sp}/{COMMITTED}", b"1")
@@ -364,6 +372,7 @@ class ImageReplicator:
                 "within_budget": rpo_s <= policy.lag_budget_s,
             }
         return {"coord": coord_id,
+                "trace_id": coord.trace_id,
                 "policy": {"lag_budget_s": policy.lag_budget_s,
                            "bandwidth_bps": policy.bandwidth_bps,
                            "targets": list(policy.targets)},

@@ -162,6 +162,7 @@ class GlobalScheduler:
         self.backfill_reuploads = 0      # chunks a backfill had to ship (0!)
         self.requeues = 0                # dead-cloud jobs sent back to queue
         self.capacity_races = 0          # placements aborted back to queue
+        self.shrinks = 0                 # gang jobs placed below full size
         self.tick_errors = 0
         self._subscribe()
         self._adopt_existing()
@@ -493,6 +494,29 @@ class GlobalScheduler:
             _, _, _, name, victims = preemptive[0]
             return {"op": "place", "coord": coord, "mode": mode,
                     "backend": name, "victims": victims}
+        # Gang elastic shrink: a gang job that holds a committed gang
+        # image can reshard onto fewer ranks than it ran with, so when
+        # nothing fits at full size it may claim a smaller free block —
+        # but never below min_vms (0 = shrink disabled: full n_vms or
+        # nothing), and never without an image (a fresh gang start is
+        # all-or-nothing at n_vms).
+        if asr.gang and needs_image and 0 < asr.min_vms < asr.n_vms:
+            floor = asr.min_vms
+            shrunk: List[Tuple[float, int, int, str]] = []
+            for i, name in enumerate(self._allowed(asr)):
+                if needs_image and name != asr.backend:
+                    warm = self._warm_step(coord, name)
+                    if warm is None or (home_latest is not None
+                                        and warm < home_latest):
+                        continue           # zero-re-upload gate still holds
+                free = self._free(name)
+                if floor <= free < asr.n_vms:
+                    shrunk.append((self._score(coord, name, free, warmth),
+                                   free, -i, name))
+            if shrunk:
+                shrunk.sort(reverse=True)
+                return {"op": "place", "coord": coord, "mode": mode,
+                        "backend": shrunk[0][3], "n_vms": shrunk[0][1]}
         return None
 
     def _pick_victims(self, coord: Coordinator, backend: str, free: int,
@@ -528,7 +552,8 @@ class GlobalScheduler:
             if victims and not self._exec_preempt(action["coord"], victims):
                 return False
             return self._exec_place(action["coord"], action["backend"],
-                                    action["mode"])
+                                    action["mode"],
+                                    n_vms=action.get("n_vms"))
         except Exception:                  # noqa: BLE001
             self._count("tick_errors")
             return False
@@ -584,7 +609,7 @@ class GlobalScheduler:
         return True
 
     def _exec_place(self, coord: Coordinator, backend: str,
-                    mode: str) -> bool:
+                    mode: str, n_vms: Optional[int] = None) -> bool:
         """Dispatch one placement. The decision (retarget, reservation,
         trace entry) is taken here in planning order — deterministic —
         while the blocking bring-up/restore runs on the app manager's
@@ -608,6 +633,16 @@ class GlobalScheduler:
               else {"fresh": "start", "resume": "resume",
                     "restart": "restart"}[mode])
         self._record(op, coord, backend)
+        if n_vms is not None and n_vms < coord.asr.n_vms:
+            # elastic gang shrink: remember the full size (a later grow
+            # pass can restore it), then place at the surviving count —
+            # restart_from/resume allocate coord.asr.n_vms, so the
+            # override must land before the reservation and dispatch
+            coord.metrics.setdefault("gang_full_vms", coord.asr.n_vms)
+            coord.asr.n_vms = n_vms
+            self._count("shrinks")
+            self._record("shrink", coord, backend,
+                         f"{n_vms}/{coord.metrics['gang_full_vms']}")
         with self._rlock:
             self._reserved[coord.coord_id] = (backend, coord.asr.n_vms)
 
@@ -748,12 +783,13 @@ class GlobalScheduler:
         with self._tlock:
             self._seq += 1
             self._trace.append((self._seq, op, coord.asr.name, backend,
-                                detail))
+                                detail, coord.trace_id))
 
     def decision_trace(self) -> List[Tuple]:
         """Wall-clock-free decision log: (seq, op, job name, backend,
-        detail). Two runs of the same seeded scenario must produce the
-        same trace — the determinism contract."""
+        detail, trace_id). Two runs of the same seeded scenario must
+        produce the same trace — the determinism contract; trace_id is
+        derived from the DB creation sequence, so it replays too."""
         with self._tlock:
             return list(self._trace)
 
@@ -783,5 +819,6 @@ class GlobalScheduler:
             "backfill_reuploads": self.backfill_reuploads,
             "requeues": self.requeues,
             "capacity_races": self.capacity_races,
+            "shrinks": self.shrinks,
             "tick_errors": self.tick_errors,
         }

@@ -1,0 +1,178 @@
+"""Gang jobs under seeded chaos, end to end through the service.
+
+Two storylines, both bit-for-bit replayable on the virtual clock:
+
+  * mid-barrier faults — a rank-scoped storage fault, a straggler, a
+    partition and a rank crash each fired INSIDE a snapshot's barrier.
+    Every epoch aborts all-or-nothing: the torn step never becomes
+    visible, the previous committed gang image restores at full rank
+    count, and the plane heals (next snapshot commits, or the normal
+    recovery cycle replaces the lost VM).
+  * cloud outage → elastic shrink — the GlobalScheduler requeues the
+    4-rank gang off the dead cloud and shrink-restores it onto 2
+    surviving ranks of another cloud, with zero chunk re-uploads and
+    every shared chunk fetched exactly once.
+"""
+import time
+
+import pytest
+
+from repro.ckpt import InMemoryStore
+from repro.clusters import OpenStackBackend, SnoozeBackend
+from repro.core import (ASR, CACSService, ChaosController, CheckpointPolicy,
+                        CoordState, FaultEvent, FaultKind, FaultSchedule,
+                        GangApp, GlobalScheduler)
+from repro.core.chaos import VirtualClock, run_gang_scenario
+from repro.sim import active_clock
+
+
+@pytest.fixture(autouse=True)
+def _virtual_time(sim_clock):
+    yield
+
+
+def _gang_schedule(seed):
+    return FaultSchedule(seed=seed, events=[
+        FaultEvent(at_s=2.0, kind=FaultKind.GANG_BARRIER_PUT_FAULT,
+                   vm_index=seed % 4, n_ops=3, phase="save"),
+        FaultEvent(at_s=6.0, kind=FaultKind.GANG_BARRIER_STRAGGLER,
+                   vm_index=(seed + 1) % 4, slowdown=200.0),
+        FaultEvent(at_s=14.0, kind=FaultKind.GANG_BARRIER_PARTITION,
+                   vm_index=(seed + 2) % 4, phase="drain"),
+        FaultEvent(at_s=26.0, kind=FaultKind.GANG_BARRIER_CRASH,
+                   vm_index=(seed + 3) % 4, phase="drain"),
+    ])
+
+
+def test_mid_barrier_faults_abort_all_or_nothing():
+    res = run_gang_scenario(_gang_schedule(3), settle_timeout_s=120)
+    assert res.all_ok, res.to_dict()["outcomes"]
+    assert res.final_state == "RUNNING"
+    # every event aborted exactly one epoch; crash + partition each drove
+    # one full recovery cycle off the intact previous image
+    reasons = [o.detail for o in res.outcomes]
+    assert "abort=store_fault" in reasons[0]
+    assert "abort=straggler" in reasons[1]
+    assert "abort=partition_or_crash" in reasons[2]
+    assert "abort=partition_or_crash" in reasons[3]
+    assert res.recoveries >= 2
+    assert all(o.trace_id.startswith("tr-gang-") for o in res.outcomes)
+
+
+def test_gang_chaos_trace_replays_bit_for_bit():
+    r1 = run_gang_scenario(_gang_schedule(5), settle_timeout_s=120)
+    r2 = run_gang_scenario(_gang_schedule(5), settle_timeout_s=120)
+    assert r1.all_ok and r2.all_ok
+    assert r1.trace == r2.trace
+    assert [o.trace_id for o in r1.outcomes] \
+        == [o.trace_id for o in r2.outcomes]
+
+
+def _run_shrink_scenario(seed):
+    """4-rank gang on cloud A (Snooze, 8 hosts); cloud B (OpenStack) has
+    only 2 hosts. Both clouds read the same object store, so the warm
+    zero-re-upload gate passes without a replicator. An outage of A must
+    end with the gang resharded onto B's 2 survivors."""
+    a = SnoozeBackend(n_hosts=8)
+    b = OpenStackBackend(n_hosts=2)
+    store = InMemoryStore()
+    svc = CACSService({"snooze": a, "openstack": b}, {"default": store})
+    sched = GlobalScheduler(svc, clock=VirtualClock(),
+                            cloud_stores={"snooze": "default",
+                                          "openstack": "default"})
+    svc.attach_scheduler(sched)
+    sched.start()
+    try:
+        cid = sched.submit(ASR(
+            name=f"gang-{seed}", n_vms=4, backend="snooze", priority=5,
+            app_factory=lambda: GangApp(global_rows=16, iter_time_s=0.05),
+            policy=CheckpointPolicy(period_s=0, keep_last=3),
+            gang=True, min_vms=2))
+        svc.wait_for_state(cid, CoordState.RUNNING, 30)
+        active_clock().paper_sleep(1.0)
+        svc.trigger_checkpoint(cid)        # committed gang image at 4 ranks
+        schedule = FaultSchedule(seed=seed, events=[
+            FaultEvent(at_s=2.0, kind=FaultKind.CLOUD_OUTAGE)])
+        ctrl = ChaosController(svc, cid, a, schedule, scheduler=sched,
+                               settle_timeout_s=120)
+        outcomes = ctrl.run()
+        coord = svc.db.get(cid)
+        deadline = time.monotonic() + 30
+        while (time.monotonic() < deadline
+               and coord.state != CoordState.RUNNING):
+            active_clock().sleep(0.01)
+        it0 = coord.app.min_iteration()
+        active_clock().paper_sleep(1.0)    # survivors must make progress
+        return {
+            "ok": all(o.ok for o in outcomes),
+            "trace": [o.trace_key() for o in outcomes],
+            "decisions": [t[1:] for t in sched.decision_trace()],
+            "state": coord.state.value,
+            "backend": coord.asr.backend,
+            "n_vms": len(coord.vms),
+            "asr_n_vms": coord.asr.n_vms,
+            "metrics": dict(coord.metrics),
+            "shrinks": sched.shrinks,
+            "requeues": sched.requeues,
+            "progressed": coord.app.min_iteration() > it0,
+            "restarts": coord.app.restarts,
+        }
+    finally:
+        sched.stop()
+        svc.shutdown()
+
+
+def test_outage_shrink_restores_gang_onto_surviving_ranks():
+    res = _run_shrink_scenario(seed=9)
+    assert res["ok"], res["trace"]
+    assert res["state"] == "RUNNING"
+    assert res["backend"] == "openstack"
+    assert res["n_vms"] == 2 and res["asr_n_vms"] == 2, \
+        "the gang must land on exactly the 2 survivors"
+    assert res["metrics"]["gang_full_vms"] == 4
+    assert res["shrinks"] == 1 and res["requeues"] == 1
+    # zero-re-upload invariant holds across the shrink
+    assert res["metrics"]["backfill_reuploads"] == 0
+    # reshard-on-restore fetched every shared chunk exactly once
+    assert res["metrics"]["gang_restore_ranks"] == 2
+    assert (res["metrics"]["gang_restore_fetches"]
+            == res["metrics"]["gang_restore_unique"])
+    assert res["progressed"], "survivors must resume the computation"
+    assert res["restarts"] == 1
+    ops = [d[0] for d in res["decisions"]]
+    assert ops == ["submit", "start", "requeue", "backfill", "shrink"]
+
+
+def test_outage_shrink_replays_bit_for_bit():
+    r1 = _run_shrink_scenario(seed=13)
+    r2 = _run_shrink_scenario(seed=13)
+    assert r1["ok"] and r2["ok"]
+    assert r1["trace"] == r2["trace"]
+    assert r1["decisions"] == r2["decisions"]
+    assert r1["n_vms"] == r2["n_vms"] == 2
+
+
+def test_gang_without_image_never_places_below_full_size():
+    """All-or-nothing: a fresh gang job (no committed image yet) must not
+    start on fewer VMs than asked, even when min_vms would allow it."""
+    b = OpenStackBackend(n_hosts=2)
+    svc = CACSService({"openstack": b}, {"default": InMemoryStore()})
+    sched = GlobalScheduler(svc, clock=VirtualClock(),
+                            cloud_stores={"openstack": "default"})
+    svc.attach_scheduler(sched)
+    sched.start()
+    try:
+        cid = sched.submit(ASR(
+            name="gang-fresh", n_vms=4, backend="openstack", priority=5,
+            app_factory=lambda: GangApp(global_rows=8, iter_time_s=0.05),
+            policy=CheckpointPolicy(period_s=0),
+            gang=True, min_vms=2))
+        active_clock().paper_sleep(2.0)
+        sched.tick()
+        active_clock().paper_sleep(1.0)
+        coord = svc.db.get(cid)
+        assert coord.state == CoordState.QUEUED
+        assert sched.shrinks == 0
+    finally:
+        sched.stop()
+        svc.shutdown()

@@ -75,10 +75,14 @@ def _run_outage_scenario(seed, record_lock=False):
         outcomes = ctrl.run()
         coord = svc.db.get(cid)
         # the outage settles on the scheduler's backfill; give the final
-        # state a beat to publish before reading it
+        # state AND the counters a beat to publish before reading them:
+        # restart_from flips the job RUNNING before _finish_restart (on
+        # the pool thread) bumps backfills, so waiting on state alone
+        # races the counter by a few milliseconds under load
         deadline = time.monotonic() + 30
         while (time.monotonic() < deadline
-               and coord.state != CoordState.RUNNING):
+               and not (coord.state == CoordState.RUNNING
+                        and sched.backfills >= 1)):
             active_clock().sleep(0.01)
         return {
             "ok": all(o.ok for o in outcomes),
