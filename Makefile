@@ -6,14 +6,15 @@
 #   make failover-smoke  seeded cross-cloud outage -> standby failover
 #   make sched-smoke     seeded over-subscription scenario + property suite
 #   make gang-smoke      gang barrier overhead + outage shrink-restore MTTR
-#   make bench-diff      fresh chaos+scheduler benches vs committed baselines
+#   make train-smoke     real-pytree device data path: stall/bytes/bit-exact
+#   make bench-diff      fresh gated benches vs committed baselines
 #   make docs-lint       sanity-check docs: files exist, internal refs resolve
 
 PY      ?= python
 PYPATH  := src
 
 .PHONY: test bench-smoke chaos-smoke failover-smoke sched-smoke gang-smoke \
-	bench-diff docs-lint
+	train-smoke bench-diff docs-lint
 
 test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
@@ -38,9 +39,15 @@ gang-smoke:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q \
 		tests/test_gang.py tests/test_gang_chaos.py
 
+train-smoke:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only train_ckpt
+	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q tests/test_train_ckpt.py
+
+# bench_diff diffs EVERY committed baseline, so regenerate them all here
 bench-diff:
-	CHAOS_TRIALS=2 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run \
-		--only fault_recovery,oversubscription,gang --json-dir bench-results
+	CHAOS_TRIALS=2 FAILOVER_TRIALS=1 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run \
+		--only fault_recovery,oversubscription,gang,replication,train_ckpt \
+		--json-dir bench-results
 	$(PY) scripts/bench_diff.py --fresh bench-results
 
 docs-lint:

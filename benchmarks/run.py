@@ -21,7 +21,7 @@ import traceback
 
 ALL = ("fig3", "table2", "table2incr", "fig4", "fig5", "fig6",
        "ckpt_path", "pplane", "fault_recovery", "replication",
-       "oversubscription", "gang")
+       "oversubscription", "gang", "train_ckpt")
 
 
 def main() -> None:
@@ -37,7 +37,7 @@ def main() -> None:
                             fig4_service_load, fig5_migration, fig6_backends,
                             gang, oversubscription, parallel_plane,
                             replication, table2_image_size,
-                            table2_incremental)
+                            table2_incremental, train_ckpt)
     from benchmarks.common import CSV_ROWS
 
     modules = {
@@ -53,6 +53,7 @@ def main() -> None:
         "replication": replication,
         "oversubscription": oversubscription,
         "gang": gang,
+        "train_ckpt": train_ckpt,
     }
     print("bench,param,metric,value")
     failures = 0

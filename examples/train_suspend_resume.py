@@ -1,0 +1,109 @@
+"""Train → suspend to an int8 swap-out image → resume: the device data
+path end to end.
+
+A real JAX training job runs under CACS with two codecs in play:
+
+  * periodic/explicit checkpoints stay **lossless** (``codec="zlib"``) —
+    restoring one resumes the exact optimizer trajectory;
+  * the **suspend** image uses ``swap_codec="int8"``: the Pallas qsnap
+    kernel quantizes the state on the accelerator, so the device-exit
+    copy carries ~4x fewer bytes — the right trade for swap-out state
+    that will be read back once, soon (over-subscription eviction).
+
+Along the way the storyline shows what ``snapshot_async`` costs the
+training loop (microseconds — compare ``app.ckpt_stalls`` with the
+step time) and proves the lossless path is bit-exact by replaying the
+suspended run against an uninterrupted reference.
+
+    PYTHONPATH=src python examples/train_suspend_resume.py
+"""
+import dataclasses
+import time
+
+import numpy as np
+
+from repro.ckpt import InMemoryStore
+from repro.clusters import SnoozeBackend
+from repro.configs import get_config, reduced
+from repro.core import ASR, CACSService, CheckpointPolicy, CoordState
+from repro.train import AdamWConfig, TrainerApp
+
+
+def main() -> None:
+    cfg = dataclasses.replace(reduced(get_config("repro-100m")),
+                              dtype="float32")
+    steps, batch, seq = 40, 2, 64
+    opt = AdamWConfig(lr=3e-4, warmup_steps=5, total_steps=steps)
+
+    def make_app() -> TrainerApp:
+        return TrainerApp(cfg, global_batch=batch, seq_len=seq,
+                          n_steps=steps, opt=opt)
+
+    # uninterrupted reference run (for the bit-exactness check at the end)
+    print(f"[swap] reference run: {cfg.param_count()/1e6:.1f}M params, "
+          f"{steps} steps")
+    ref = make_app()
+    ref.start(None, None)
+    while not ref.is_done():
+        time.sleep(0.1)
+    ref.stop()
+
+    store = InMemoryStore()
+    svc = CACSService({"snooze": SnoozeBackend(n_hosts=4)},
+                      {"default": store})
+    asr = ASR(name="swap-train", n_vms=1, backend="snooze",
+              app_factory=make_app,
+              policy=CheckpointPolicy(period_s=0, codec="zlib",
+                                      swap_codec="int8"))
+    cid = svc.submit(asr)
+    svc.wait_for_state(cid, CoordState.RUNNING, timeout=600)
+    coord = svc.db.get(cid)
+    while coord.app.current_step < steps // 3:
+        time.sleep(0.1)
+
+    # explicit checkpoint: lossless image, staged capture (µs stall)
+    ckpt_step = svc.trigger_checkpoint(cid)
+    info = svc.apps.ckpt.image_info(coord, ckpt_step)
+    print(f"[swap] explicit image: codec={info['codec']} "
+          f"bytes={info['bytes']/1e6:.1f}MB "
+          f"capture stall={coord.app.ckpt_stalls[-1]*1e6:.0f}µs "
+          f"(step time {np.median(coord.app.step_times):.3f}s)")
+
+    # suspend: the swap-out image goes through the on-device int8 encode
+    print(f"[swap] suspending at step {coord.app.current_step}")
+    svc.apps.suspend(cid)
+    info = svc.apps.ckpt.image_info(coord, ckpt_step + 1)
+    print(f"[swap] swap-out image: codec={info['codec']} "
+          f"bytes={info['bytes']/1e6:.1f}MB")
+    assert info["codec"] == "int8"
+
+    # resume from the int8 image and train to completion
+    svc.apps.resume(cid)
+    coord = svc.db.get(cid)
+    while not coord.app.is_done():
+        time.sleep(0.1)
+    print(f"[swap] resumed run done: step {coord.app.current_step}, "
+          f"loss {coord.app.last_loss:.4f} "
+          f"(reference {ref.last_loss:.4f}), "
+          f"restarts {coord.app.restarts}")
+    assert coord.app.restarts == 1
+    assert np.isfinite(coord.app.last_loss)
+
+    # the lossless path is bit-exact: replay the reference from the
+    # explicit zlib image and compare against the uninterrupted run
+    from repro.ckpt import restore
+    snap, _ = restore(store, coord.ckpt_prefix, ckpt_step)
+    replay = make_app()
+    replay.start(None, snap)
+    while not replay.is_done():
+        time.sleep(0.1)
+    replay.stop()
+    assert replay.losses[-1] == ref.losses[-1], "lossless path diverged"
+    print(f"[swap] bit-exact replay from the lossless image: "
+          f"final loss {replay.losses[-1]:.6f} == reference")
+    svc.shutdown()
+    print("[swap] OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -37,6 +37,9 @@ EXACT_METRICS = {
     "all_ok",
     "restore_extra_fetches",      # gang reshard: single-flight CAS reads
     "restored_ranks",             # gang shrink lands on exactly the floor
+    "restore_bitexact",           # async device path restores losslessly
+    "floor3x_ok",                 # device-exit byte cut (deterministic)
+    "floor5x_ok",                 # staged-capture stall cut vs sync save
 }
 
 

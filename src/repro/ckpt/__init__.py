@@ -1,5 +1,8 @@
-from repro.ckpt.plane import DataPlaneConfig
+from repro.ckpt.plane import DataPlaneConfig, PreEncodedChunk
+from repro.ckpt.layout import PreEncodedLeaf
 from repro.ckpt.reader import latest_step, list_steps, load_manifest, restore
+from repro.ckpt.snapshot import (DeferredSnapshot, ReadySnapshot,
+                                 SnapshotHandle, resolve_state)
 from repro.ckpt.storage import (ChaosStorageError, FaultyStore, InMemoryStore,
                                 LocalFSStore, ObjectStore, TwoTierStore)
 from repro.ckpt.writer import AsyncCheckpointer, save_checkpoint
@@ -10,4 +13,6 @@ __all__ = [
     "ChaosStorageError", "FaultyStore",
     "InMemoryStore", "LocalFSStore", "ObjectStore", "TwoTierStore",
     "AsyncCheckpointer", "save_checkpoint", "gc", "DataPlaneConfig",
+    "PreEncodedChunk", "PreEncodedLeaf",
+    "SnapshotHandle", "ReadySnapshot", "DeferredSnapshot", "resolve_state",
 ]

@@ -23,6 +23,30 @@ import numpy as np
 BLOCK = 256
 _MAGIC = b"QS01"
 
+# Scales are computed as absmax * (1/127) — an IEEE f32 multiply — rather
+# than absmax / 127.  XLA rewrites division by a constant into a
+# reciprocal multiply, so the multiply formulation is the only one that is
+# bit-identical between this host codec, the jnp oracle, and the Pallas
+# kernel (device-side encode).  Interchange tests depend on this.
+INV127 = np.float32(1.0 / 127.0)
+
+try:                                  # bf16 registers as kind='V', not 'f'
+    import ml_dtypes
+    _EXTRA_FLOATS = {np.dtype(ml_dtypes.bfloat16)}
+except ImportError:                   # pragma: no cover
+    _EXTRA_FLOATS = set()
+
+
+def is_float_dtype(dt: np.dtype) -> bool:
+    """Quantizable-float predicate shared with the device encode path.
+
+    Host and device encoders must agree on which leaves quantize, or the
+    same pytree produces different images on the two paths.  bf16 is the
+    training dtype and must count even though numpy reports kind='V'.
+    """
+    dt = np.dtype(dt)
+    return dt.kind == "f" or dt in _EXTRA_FLOATS
+
 
 def quantize_int8(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     """x: float array -> (int8 codes [n_pad], f32 scales [n_blocks])."""
@@ -32,7 +56,7 @@ def quantize_int8(x: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
     buf = np.zeros(n_pad, np.float32)
     buf[:n] = flat
     blocks = buf.reshape(-1, BLOCK)
-    scales = np.max(np.abs(blocks), axis=1) / 127.0
+    scales = np.max(np.abs(blocks), axis=1) * INV127
     scales = np.where(scales == 0, 1.0, scales).astype(np.float32)
     codes = np.clip(np.rint(blocks / scales[:, None]), -127, 127).astype(np.int8)
     return codes.reshape(-1), scales
@@ -44,6 +68,23 @@ def dequantize_int8(codes: np.ndarray, scales: np.ndarray,
     return blocks.reshape(-1)[:n]
 
 
+def frame_int8(n: int, scales: np.ndarray, codes: np.ndarray) -> bytes:
+    """Frame (codes, scales) of an n-element float chunk as a QS01 payload.
+
+    Shared by the host codec and the device encode path
+    (``repro.kernels.qsnap.qsnap_encode_chunks``) so both emit the exact
+    same bytes — CAS digests over encoded bytes then dedup across the two.
+    """
+    return (_MAGIC + b"INT8"
+            + struct.pack("<qq", n, scales.size)
+            + scales.tobytes() + codes.tobytes())
+
+
+def frame_raw(data: bytes) -> bytes:
+    """Frame a non-float chunk's raw bytes as a QS01 passthrough payload."""
+    return _MAGIC + b"RAWD" + data
+
+
 def encode(data: bytes, dtype: np.dtype, codec: str) -> bytes:
     """Encode one chunk's raw bytes."""
     if codec == "raw":
@@ -52,14 +93,12 @@ def encode(data: bytes, dtype: np.dtype, codec: str) -> bytes:
         return zlib.compress(data, level=1)
     if codec in ("int8", "int8+zlib"):
         dt = np.dtype(dtype)
-        if dt.kind != "f":
-            payload = _MAGIC + b"RAWD" + data     # non-float: store raw
+        if not is_float_dtype(dt):
+            payload = frame_raw(data)             # non-float: store raw
         else:
             arr = np.frombuffer(data, dtype=dt)
             codes, scales = quantize_int8(arr.astype(np.float32))
-            payload = (_MAGIC + b"INT8"
-                       + struct.pack("<qq", arr.size, scales.size)
-                       + scales.tobytes() + codes.tobytes())
+            payload = frame_int8(arr.size, scales, codes)
         if codec == "int8+zlib":
             return zlib.compress(payload, level=1)
         return payload

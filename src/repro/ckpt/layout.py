@@ -103,6 +103,24 @@ class ChunkInfo:
 
 
 @dataclasses.dataclass
+class PreEncodedLeaf:
+    """Staging-form leaf whose shards were already encoded on device.
+
+    Appears as an (unregistered, hence atomic) pytree leaf inside a
+    snapshot produced by ``TrainerApp.snapshot_async`` with a lossy swap
+    codec: ``chunks`` carries ``(offset, shape, PreEncodedChunk)`` triples
+    in place of host ndarrays. ``writer._stage`` passes these straight to
+    the upload pipeline; the manifest entry (shape/dtype/kind) is
+    indistinguishable from a host-encoded leaf, so restore needs no new
+    code path.
+    """
+    shape: Tuple[int, ...]
+    dtype: str
+    chunks: List[Tuple[Tuple[int, ...], Tuple[int, ...], Any]]
+    kind: str = "array"
+
+
+@dataclasses.dataclass
 class LeafInfo:
     name: str
     shape: Tuple[int, ...]

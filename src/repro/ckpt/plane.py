@@ -33,6 +33,29 @@ from typing import Dict, Optional, Tuple
 
 
 @dataclasses.dataclass(frozen=True)
+class PreEncodedChunk:
+    """A chunk that enters the save pipeline already encoded.
+
+    Produced by device-side encode (``kernels.qsnap.qsnap_encode_chunks``
+    quantizes on the accelerator so the D2H copy carries int8+scales, not
+    f32). The writer's encode stage becomes pass-through: the payload is
+    digested as-is, so a device-encoded chunk and a host-encoded chunk of
+    the same content share one CAS entry bit-for-bit.
+
+    ``codec`` names the codec this payload already satisfies ("int8");
+    the save's image codec must equal it or be a zlib-refinement of it
+    (writer._adapt_pre_encoded). ``nbytes`` feeds the ByteBudget exactly
+    like a host ndarray would.
+    """
+    data: bytes
+    codec: str
+
+    @property
+    def nbytes(self) -> int:
+        return len(self.data)
+
+
+@dataclasses.dataclass(frozen=True)
 class DataPlaneConfig:
     """Knobs for the parallel checkpoint data plane.
 

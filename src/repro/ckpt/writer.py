@@ -37,6 +37,7 @@ import concurrent.futures as cf
 import hashlib
 import threading
 import time
+import zlib
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -44,20 +45,31 @@ import numpy as np
 
 from repro.ckpt import compression
 from repro.ckpt.layout import (COMMITTED, MANIFEST, ChunkInfo, LeafInfo,
-                               Manifest, cas_key, chunk_digest, chunk_key,
-                               leaf_items, local_shards, np_dtype,
-                               step_prefix, structure_skeleton)
-from repro.ckpt.plane import (ByteBudget, DataPlaneConfig, SingleFlight,
-                              shared_executor)
+                               Manifest, PreEncodedLeaf, cas_key,
+                               chunk_digest, chunk_key, leaf_items,
+                               local_shards, np_dtype, step_prefix,
+                               structure_skeleton)
+from repro.ckpt.plane import (ByteBudget, DataPlaneConfig, PreEncodedChunk,
+                              SingleFlight, shared_executor)
+from repro.ckpt.snapshot import SnapshotHandle, resolve_state
 from repro.ckpt.storage import ObjectStore
 
 
 def _stage(tree: Any) -> List[Tuple[str, str, Tuple[int, ...], str,
                                     List[Tuple[Tuple[int, ...],
                                                Tuple[int, ...], np.ndarray]]]]:
-    """Synchronous device->host staging: [(name, kind, shape, dtype, shards)]."""
+    """Synchronous device->host staging: [(name, kind, shape, dtype, shards)].
+
+    ``PreEncodedLeaf`` leaves (device-side encode already done) carry
+    ``PreEncodedChunk`` payloads in the shard slot instead of host
+    ndarrays; the encode stage passes them through untouched.
+    """
     staged = []
     for name, leaf in leaf_items(tree):
+        if isinstance(leaf, PreEncodedLeaf):
+            staged.append((name, leaf.kind, tuple(leaf.shape), leaf.dtype,
+                           list(leaf.chunks)))
+            continue
         kind = "array" if isinstance(leaf, (jax.Array, np.ndarray)) else "scalar"
         shards = local_shards(leaf)
         shape = np.asarray(leaf).shape if kind == "scalar" else tuple(leaf.shape)
@@ -66,12 +78,37 @@ def _stage(tree: Any) -> List[Tuple[str, str, Tuple[int, ...], str,
     return staged
 
 
-def _raw_digest(dtype: str, raw: bytes) -> str:
-    """Identity of a chunk's *unencoded* content (pre-codec dedup key)."""
+def _raw_digest(codec: str, dtype: str, raw: bytes) -> str:
+    """Identity of a chunk's *unencoded* content (pre-codec dedup key).
+
+    Scoped by codec: the cache maps raw content to an *encoded* digest,
+    so the same bytes saved under a different codec (e.g. a lossless
+    periodic image vs an int8 swap-out image) must miss, not alias.
+    """
     h = hashlib.blake2b(digest_size=20)
+    h.update(codec.encode())
+    h.update(b"\0")
     h.update(dtype.encode())
     h.update(raw)
     return h.hexdigest()
+
+
+def _adapt_pre_encoded(chunk: PreEncodedChunk, codec: str) -> bytes:
+    """Finish a device-encoded payload for the image codec.
+
+    Equal codec: pass through (byte-identical to the host encoder, so the
+    CAS digest dedups across device- and host-compressed images).
+    ``int8+zlib`` over an ``int8`` payload: apply the same deflate the
+    host codec would. Anything else is a policy error — lossy payloads
+    cannot satisfy a lossless image codec.
+    """
+    if codec == chunk.codec:
+        return chunk.data
+    if codec == "int8+zlib" and chunk.codec == "int8":
+        return zlib.compress(chunk.data, level=1)
+    raise ValueError(
+        f"pre-encoded chunk (codec {chunk.codec!r}) cannot satisfy "
+        f"image codec {codec!r}")
 
 
 def known_digests(store: ObjectStore, prefix: str,
@@ -102,7 +139,9 @@ def save_checkpoint(store: ObjectStore, prefix: str, step: int, tree: Any, *,
     skips any chunk already present in the previous committed manifest;
     incremental=False writes the legacy step-private v1 layout.
     plane configures the parallel data plane (None = DataPlaneConfig()).
+    ``tree`` may be a SnapshotHandle (resolved here — blocking save).
     """
+    tree = resolve_state(tree)
     staged = _stage(tree)
     skeleton = structure_skeleton(tree)
     return _write_staged(store, prefix, step, staged, skeleton, codec,
@@ -172,8 +211,21 @@ class _Encoded:
 
 
 def _encode_chunk(ctx: _SaveContext, step: int, name: str, off, shp,
-                  host: np.ndarray, dtype: str) -> _Encoded:
-    """Stage 1: serialize + codec + digest (CPU-bound, encode pool)."""
+                  host, dtype: str) -> _Encoded:
+    """Stage 1: serialize + codec + digest (CPU-bound, encode pool).
+
+    ``host`` is a host ndarray, or a PreEncodedChunk whose payload was
+    built on device — then the codec is already applied and this stage
+    reduces to adapt + digest (the raw cache is skipped: there is no raw
+    buffer, and no encode to save).
+    """
+    if isinstance(host, PreEncodedChunk):
+        data = _adapt_pre_encoded(host, ctx.codec)
+        if not ctx.incremental:
+            return _Encoded(key=chunk_key(ctx.prefix, step, name, off),
+                            data=data, off=off, shp=shp)
+        return _Encoded(digest=chunk_digest(data), data=data, off=off,
+                        shp=shp)
     raw = np.ascontiguousarray(host).tobytes()
     if not ctx.incremental:
         key = chunk_key(ctx.prefix, step, name, off)
@@ -181,7 +233,7 @@ def _encode_chunk(ctx: _SaveContext, step: int, name: str, off, shp,
         return _Encoded(key=key, data=data, off=off, shp=shp)
     rk: Optional[str] = None
     if ctx.raw_cache is not None:
-        rk = _raw_digest(dtype, raw)
+        rk = _raw_digest(ctx.codec, dtype, raw)
         if not ctx.raw_flight.claim(rk, lambda: rk in ctx.raw_cache):
             with ctx.lock:
                 digest, nbytes = ctx.raw_cache[rk]
@@ -382,22 +434,42 @@ class AsyncCheckpointer:
 
     def save(self, step: int, tree: Any,
              metadata: Optional[Dict[str, Any]] = None,
-             on_commit=None) -> None:
+             on_commit=None, codec: Optional[str] = None) -> None:
+        """Submit an async save of ``tree`` (a pytree or SnapshotHandle).
+
+        A materialized pytree is staged synchronously here (legacy
+        contract: the caller's lock protects it only for this call). A
+        SnapshotHandle is resolved *on the writer thread* — the caller
+        returns in microseconds and the device→host copy (or device
+        encode) overlaps whatever the app does next. ``codec`` overrides
+        this checkpointer's default for just this save (e.g. the lossy
+        swap-out codec for a suspend image).
+        """
         # A previous save's failure (e.g. a transient storage fault) must
         # not poison this independent save: record it and move on. The
         # failed step has no COMMITTED marker, so it is simply invisible.
         self.wait(raise_error=False)
         t0 = time.monotonic()
-        staged = _stage(tree)                      # sync: consistent snapshot
-        skeleton = structure_skeleton(tree)
+        if isinstance(tree, SnapshotHandle):
+            staged = skeleton = None               # resolved on writer thread
+        else:
+            staged = _stage(tree)                  # sync: consistent snapshot
+            skeleton = structure_skeleton(tree)
         self.staging_time += time.monotonic() - t0
+        save_codec = codec or self.codec
 
         def job():
+            if staged is None:
+                state = tree.resolve()             # off the app's hot path
+                job_staged = _stage(state)
+                job_skeleton = structure_skeleton(state)
+            else:
+                job_staged, job_skeleton = staged, skeleton
             if self.incremental and self._known is None:
                 self._known = known_digests(self.store, self.prefix,
                                             before_step=step)
-            man = _write_staged(self.store, self.prefix, step, staged,
-                                skeleton, self.codec, metadata or {},
+            man = _write_staged(self.store, self.prefix, step, job_staged,
+                                job_skeleton, save_codec, metadata or {},
                                 incremental=self.incremental,
                                 known=self._known, raw_cache=self._raw_cache,
                                 plane=self.plane)

@@ -8,7 +8,8 @@ Public surface:
                             backfill over replicated images
   * ``migration``         — clone / migrate / cloudify (paper §5.3, §7.3)
 """
-from repro.core.application import Application, AppContext, SimulatedApp
+from repro.core.application import (Application, AppContext, SimulatedApp,
+                                    snapshot_of)
 from repro.core.chaos import (GANG_KINDS, ChaosController, ChaosHealthHook,
                               FaultEvent, FaultKind, FaultOutcome,
                               FaultSchedule, ScenarioResult,
@@ -29,7 +30,7 @@ from repro.core.scheduler import (GlobalScheduler, JobSpec, PlacementWeights,
 from repro.core.service import CACSService
 
 __all__ = [
-    "Application", "AppContext", "SimulatedApp",
+    "Application", "AppContext", "SimulatedApp", "snapshot_of",
     "ASR", "CheckpointPolicy", "Coordinator", "CoordinatorDB", "CoordState",
     "InvalidTransition",
     "ChaosController", "ChaosHealthHook", "FaultEvent", "FaultKind",

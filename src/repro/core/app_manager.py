@@ -19,7 +19,7 @@ from typing import Any, Dict, Optional
 
 from repro.clusters.base import SimBackend
 from repro.clusters.simulator import CapacityError
-from repro.core.application import AppContext
+from repro.core.application import AppContext, snapshot_of
 from repro.core.checkpoint_manager import CheckpointManager
 from repro.core.cloud_manager import CloudManager
 from repro.sim.simtime import active_clock
@@ -202,8 +202,9 @@ class AppManager:
                     f"cannot checkpoint in state {coord.state.value}")
             # a gang snapshot is cut by the barrier (quiesce + drain), not
             # by reading app state under the lock — only the step number
-            # is claimed here
-            state = None if coord.asr.gang else coord.app.checkpoint_state()
+            # is claimed here. Staged apps hand back a handle in
+            # microseconds; materialization runs on the writer thread.
+            state = None if coord.asr.gang else snapshot_of(coord.app)
             # claim the step under the lock: a concurrent suspend (or a
             # second checkpoint_now) must not mint the same step number
             step = self._step_counter.get(coord_id, 0) + 1
@@ -459,7 +460,10 @@ class AppManager:
         with coord.lock:
             if coord.state != CoordState.RUNNING:
                 raise RuntimeError(f"cannot suspend {coord.state.value}")
-            state = None if coord.asr.gang else coord.app.checkpoint_state()
+            pol = coord.asr.policy
+            swap_codec = pol.swap_codec or None
+            state = None if coord.asr.gang else snapshot_of(
+                coord.app, codec=swap_codec)
             step = self._step_counter.get(coord_id, 0) + 1
             self._step_counter[coord_id] = step
         # The blocking swap-out write runs OUTSIDE coord.lock: holding the
@@ -472,7 +476,7 @@ class AppManager:
             self._gang_snapshot(coord, step)
         else:
             self.ckpt.save(coord, step, state, blocking=True,
-                           metadata={"suspend": reason})
+                           metadata={"suspend": reason}, codec=swap_codec)
         with coord.lock:
             if coord.state != CoordState.RUNNING:
                 # a recovery/terminate won the race during the write; the

@@ -16,11 +16,26 @@ from typing import Any, Dict, Optional, Protocol, runtime_checkable
 
 import numpy as np
 
+from repro.ckpt.snapshot import ReadySnapshot, SnapshotHandle
 from repro.clusters.simulator import sim_sleep
 
 
 @runtime_checkable
 class Application(Protocol):
+    """CACS application contract.
+
+    Staged-snapshot extension (optional): an application may additionally
+    implement ``snapshot_async(step=None, codec=None) -> SnapshotHandle``
+    — capture a consistent snapshot in microseconds (pin immutable state
+    references under its lock) and defer materialization (device→host
+    copy, or device-side encode when ``codec`` selects a lossy image) to
+    ``handle.resolve()`` on the checkpoint writer thread. The control
+    plane always goes through ``snapshot_of``, which falls back to
+    wrapping the synchronous ``checkpoint_state`` for applications that
+    don't implement it (``SimulatedApp``, gang ranks), so implementing
+    the extension is purely a performance choice.
+    """
+
     def start(self, ctx: "AppContext", restore_state: Optional[Any]) -> None:
         """Begin (or resume) execution. Non-blocking."""
 
@@ -36,6 +51,25 @@ class Application(Protocol):
     def is_done(self) -> bool: ...
 
     def progress(self) -> float: ...
+
+
+def snapshot_of(app: Any, *, step: Optional[int] = None,
+                codec: Optional[str] = None) -> SnapshotHandle:
+    """Capture a staged snapshot of ``app`` (the control plane's one entry
+    point for cutting application state).
+
+    Applications implementing the staged extension return in microseconds
+    with materialization deferred to ``resolve()``; legacy applications
+    are wrapped in a ``ReadySnapshot`` around the synchronous
+    ``checkpoint_state()`` — identical timing and bytes to the old path.
+    ``codec`` is a hint for device-side encode ("int8"): apps that can't
+    honor it (or lossless-only apps) simply ignore it — the image codec
+    is chosen by the save, not here.
+    """
+    fn = getattr(app, "snapshot_async", None)
+    if fn is not None:
+        return fn(step=step, codec=codec)
+    return ReadySnapshot(app.checkpoint_state(), step=step)
 
 
 class AppContext:

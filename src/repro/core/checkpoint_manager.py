@@ -49,9 +49,20 @@ class CheckpointManager:
     # ---- save ----------------------------------------------------------
     def save(self, coord: Coordinator, step: int, state: Any, *,
              blocking: bool = True,
-             metadata: Optional[Dict[str, Any]] = None) -> None:
+             metadata: Optional[Dict[str, Any]] = None,
+             codec: Optional[str] = None) -> None:
+        """Save ``state`` — a materialized pytree or a SnapshotHandle.
+
+        A handle is resolved on the coordinator's writer thread (both
+        blocking and async paths), so the device→host copy never runs on
+        the caller — ``checkpoint_now``/``suspend`` hold the app stalled
+        only for the microsecond capture. ``codec`` overrides the
+        policy's image codec for this save (suspend passes
+        ``policy.swap_codec``).
+        """
         pol = coord.asr.policy
         store = self.store(pol.store)
+        save_codec = codec or pol.codec
         meta = {"app": coord.asr.name, **(metadata or {})}
 
         def run_gc(_step=None):
@@ -73,7 +84,7 @@ class CheckpointManager:
         if blocking:
             def _save_and_gc():
                 save_checkpoint(store, coord.ckpt_prefix, step, state,
-                                codec=pol.codec, metadata=meta,
+                                codec=save_codec, metadata=meta,
                                 plane=self._plane_for(coord))
                 run_gc()
             # Run the blocking save + GC on the coordinator's writer
@@ -88,7 +99,8 @@ class CheckpointManager:
         else:
             # GC must run post-commit, or it would count the in-flight step
             ck = self._checkpointer(coord)
-            ck.save(step, state, metadata=meta, on_commit=run_gc)
+            ck.save(step, state, metadata=meta, on_commit=run_gc,
+                    codec=None if save_codec == ck.codec else save_codec)
 
     def _checkpointer(self, coord: Coordinator) -> AsyncCheckpointer:
         with self._lock:

@@ -70,6 +70,12 @@ class CheckpointPolicy:
     keep_last: int = 3
     keep_every: int = 0
     store: str = "default"           # named storage backend
+    # Codec for *swap-out* images (suspend/preemption). A preempted job's
+    # image is written once and read once, so a lossy codec ("int8":
+    # device-side qsnap encode, ~4x fewer device-exit bytes) is often
+    # acceptable there while periodic images stay lossless for exact
+    # restarts. None = use ``codec`` for swap-outs too.
+    swap_codec: Optional[str] = None
     # per-app override of the checkpoint data-plane parallelism (worker
     # counts, in-flight byte cap); None = the CheckpointManager's default
     plane: Optional[DataPlaneConfig] = None

@@ -14,10 +14,14 @@ Tiles: [block_rows, 256] codes with [block_rows, 1] scales; the lane dim
 from __future__ import annotations
 
 import functools
+from typing import List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
+
+from repro.ckpt import compression
 
 QSNAP_BLOCK = 256
 
@@ -25,7 +29,9 @@ QSNAP_BLOCK = 256
 def _quant_kernel(x_ref, codes_ref, scales_ref):
     x = x_ref[...].astype(jnp.float32)                 # [rows, 256]
     absmax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
-    scale = absmax / 127.0
+    # multiply, not /127: bit-identical to the host codec on every backend
+    # (XLA lowers x/const to a reciprocal multiply anyway)
+    scale = absmax * jnp.float32(1.0 / 127.0)
     scale = jnp.where(scale == 0, 1.0, scale)
     codes = jnp.clip(jnp.round(x / scale), -127, 127)
     codes_ref[...] = codes.astype(jnp.int8)
@@ -37,14 +43,26 @@ def _dequant_kernel(codes_ref, scales_ref, x_ref):
     x_ref[...] = (codes * scales_ref[...]).astype(x_ref.dtype)
 
 
+def _fit_block_rows(rows: int, cap: int) -> int:
+    """Largest grid tile height <= cap that divides ``rows`` evenly.
+
+    Leaf sizes are arbitrary (rows=300 is legal after 256-padding of a
+    76 800-element leaf), so the tile must be a true divisor — min(cap,
+    rows) alone trips the grid-coverage assert for non-power-of-two rows.
+    """
+    b = min(cap, rows)
+    while rows % b:
+        b -= 1
+    return b
+
+
 def qsnap_quantize(x: jax.Array, *, block_rows: int = 256,
                    interpret: bool = False):
     """x: [N] float (N % 256 == 0) -> (codes int8 [N], scales f32 [N/256])."""
     n = x.shape[0]
     assert n % QSNAP_BLOCK == 0, n
     rows = n // QSNAP_BLOCK
-    block_rows = min(block_rows, rows)
-    assert rows % block_rows == 0
+    block_rows = _fit_block_rows(rows, block_rows)
     xm = x.reshape(rows, QSNAP_BLOCK)
     codes, scales = pl.pallas_call(
         _quant_kernel,
@@ -68,8 +86,7 @@ def qsnap_dequantize(codes: jax.Array, scales: jax.Array, dtype=jnp.float32,
     """Inverse of qsnap_quantize -> [N] of ``dtype``."""
     n = codes.shape[0]
     rows = n // QSNAP_BLOCK
-    block_rows = min(block_rows, rows)
-    assert rows % block_rows == 0
+    block_rows = _fit_block_rows(rows, block_rows)
     out = pl.pallas_call(
         _dequant_kernel,
         grid=(rows // block_rows,),
@@ -82,3 +99,53 @@ def qsnap_dequantize(codes: jax.Array, scales: jax.Array, dtype=jnp.float32,
         interpret=interpret,
     )(codes.reshape(rows, QSNAP_BLOCK), scales.reshape(rows, 1))
     return out.reshape(-1)
+
+
+def _encode_impl() -> str:
+    # mirror of ops.default_impl(); inlined to keep kernels.ops -> qsnap
+    # the only import direction between the two modules
+    return "pallas" if jax.default_backend() == "tpu" else "ref"
+
+
+def qsnap_encode_chunks(arrs: Sequence[jax.Array], *,
+                        impl: Optional[str] = None,
+                        interpret: bool = False) -> List[bytes]:
+    """Quantize chunk arrays on device into finished ``QS01`` payloads.
+
+    For each float array this runs the blockwise int8 quantization on the
+    *device* (Pallas kernel on TPU, jnp oracle elsewhere) and frames the
+    result exactly as ``repro.ckpt.compression.encode(..., "int8")``
+    would: the device→host copy carries int8 codes + one f32 scale per
+    256 elements (~4x fewer bytes than f32 state), and the payload is
+    byte-identical to the host codec's, so CAS digests over encoded bytes
+    dedup across device- and host-compressed images.
+
+    Non-float arrays fall back to the host RAWD framing (they are small:
+    step counters, rng keys).  All device work is issued before the
+    single batched ``jax.device_get``, so transfers overlap.
+    """
+    impl = impl or _encode_impl()
+    staged = []                      # (index, n, device codes, scales)
+    payloads: List[Optional[bytes]] = [None] * len(arrs)
+    for i, arr in enumerate(arrs):
+        if not compression.is_float_dtype(np.dtype(arr.dtype)):
+            payloads[i] = compression.frame_raw(
+                np.ascontiguousarray(jax.device_get(arr)).tobytes())
+            continue
+        flat = arr.reshape(-1)
+        n = flat.size
+        pad = (-n) % QSNAP_BLOCK
+        if pad:
+            flat = jnp.pad(flat, (0, pad))
+        if impl == "ref":
+            from repro.kernels import ref
+            codes, scales = ref.qsnap_ref(flat)
+        else:
+            codes, scales = qsnap_quantize(flat.astype(jnp.float32),
+                                           interpret=interpret)
+        staged.append((i, n, codes, scales))
+    if staged:
+        fetched = jax.device_get([(c, s) for _, _, c, s in staged])
+        for (i, n, _, _), (codes, scales) in zip(staged, fetched):
+            payloads[i] = compression.frame_int8(n, scales, codes)
+    return payloads  # type: ignore[return-value]

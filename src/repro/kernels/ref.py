@@ -67,10 +67,11 @@ def qsnap_ref(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
     """Blockwise absmax int8 quantization. x: [N] (N % 256 == 0).
 
     Returns (codes int8 [N], scales f32 [N/256]). Matches
-    ``repro.ckpt.compression.quantize_int8`` bit-for-bit.
+    ``repro.ckpt.compression.quantize_int8`` bit-for-bit (both sides use
+    the absmax * (1/127) multiply — see ``compression.INV127``).
     """
     xf = x.astype(jnp.float32).reshape(-1, QSNAP_BLOCK)
-    scales = jnp.max(jnp.abs(xf), axis=1) / 127.0
+    scales = jnp.max(jnp.abs(xf), axis=1) * jnp.float32(1.0 / 127.0)
     scales = jnp.where(scales == 0, 1.0, scales)
     codes = jnp.clip(jnp.round(xf / scales[:, None]), -127, 127)
     return codes.astype(jnp.int8).reshape(-1), scales

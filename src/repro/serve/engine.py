@@ -8,15 +8,16 @@ the paper's job-swapping use case applied to inference.
 from __future__ import annotations
 
 import threading
-import time
 from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt.snapshot import DeferredSnapshot, SnapshotHandle
 from repro.configs.base import ArchConfig
 from repro.models.model import Model, build_model
+from repro.sim.simtime import active_clock
 
 
 class Engine:
@@ -77,6 +78,7 @@ class ServeApp:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
+        self.ckpt_stalls: List[float] = []   # seconds decode was blocked
         self.restarts = 0
 
     def _build(self):
@@ -115,9 +117,10 @@ class ServeApp:
                 self._last_token = token
                 self.tokens_out.append(np.asarray(token))
                 self.generated = 1
+        clock = active_clock()
         while not self._stop.is_set() and self.generated < self.n_tokens:
             if self.token_delay_s:
-                time.sleep(self.token_delay_s)
+                clock.sleep(self.token_delay_s)
             pos = jnp.int32(self.prompt_len + self.generated - 1)
             # NOTE: cache is donated; keep the swap atomic wrt checkpointing
             with self._lock:
@@ -131,7 +134,11 @@ class ServeApp:
                 self.tokens_out.append(np.asarray(token))
                 self.generated += 1
 
-    def checkpoint_state(self) -> Dict[str, Any]:
+    def _capture(self) -> Dict[str, Any]:
+        """Pin a consistent snapshot under the lock (waits out the window
+        where the donated cache is surrendered to an in-flight decode).
+        Returns references only — materialization is the caller's."""
+        clock = active_clock()
         while True:
             with self._lock:
                 if self.cache is not None:
@@ -140,11 +147,36 @@ class ServeApp:
                         "cache": self.cache,
                         "generated": self.generated,
                         "last_token": self._last_token,
-                        "tokens_out": np.concatenate(self.tokens_out, axis=1)
-                        if self.tokens_out else np.zeros((self.batch, 0),
-                                                         np.int32),
+                        "tokens_out": list(self.tokens_out),
                     }
-            time.sleep(0.001)
+            clock.sleep(0.001)
+
+    @staticmethod
+    def _materialize(snap: Dict[str, Any], batch: int) -> Dict[str, Any]:
+        out = dict(snap)
+        out["tokens_out"] = (np.concatenate(snap["tokens_out"], axis=1)
+                             if snap["tokens_out"]
+                             else np.zeros((batch, 0), np.int32))
+        return out
+
+    def checkpoint_state(self) -> Dict[str, Any]:
+        return self._materialize(self._capture(), self.batch)
+
+    def snapshot_async(self, *, step: Optional[int] = None,
+                       codec: Optional[str] = None) -> SnapshotHandle:
+        """Staged snapshot: capture pins params/cache/token references
+        (token-latency stall only while a decode holds the donated
+        cache); the concat + any host copies run at ``resolve()`` on the
+        writer thread. The KV cache stays lossless regardless of
+        ``codec`` — quantizing it would perturb the generated stream,
+        and suspend/resume guarantees the tokens are unchanged."""
+        clock = active_clock()
+        t0 = clock.now()
+        snap = self._capture()
+        self.ckpt_stalls.append(clock.now() - t0)
+        return DeferredSnapshot(
+            lambda: self._materialize(snap, self.batch),
+            step=snap["generated"] if step is None else step)
 
     def healthy(self) -> bool:
         return True

@@ -12,17 +12,21 @@ knows what "healthy" means).
 from __future__ import annotations
 
 import threading
-import time
 from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.ckpt.layout import PreEncodedLeaf
+from repro.ckpt.plane import PreEncodedChunk
+from repro.ckpt.snapshot import DeferredSnapshot, SnapshotHandle
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import TokenPipeline
+from repro.kernels.qsnap import qsnap_encode_chunks
 from repro.models.model import Model, build_model
 from repro.sharding.specs import MeshAxes, activation_sharding
+from repro.sim.simtime import active_clock
 from repro.train.optimizer import (AdamWConfig, adamw_init, adamw_update,
                                    opt_state_dims)
 
@@ -65,6 +69,44 @@ def make_train_step(model: Model, opt_cfg: AdamWConfig, *,
     return train_step
 
 
+def _device_encodable(x: Any) -> bool:
+    """Leaves the device encode stage can handle: single-shard jax arrays
+    (a sharded leaf would need per-shard chunk framing — those fall back
+    to the host path, which handles shards natively)."""
+    if not isinstance(x, jax.Array):
+        return False
+    try:
+        return len(x.sharding.device_set) == 1
+    except Exception:                              # noqa: BLE001
+        return False
+
+
+def encode_state_on_device(tree: Any, *, impl: Optional[str] = None,
+                           interpret: bool = False) -> Any:
+    """Replace array leaves with device-encoded ``QS01`` payloads.
+
+    Runs ``kernels.qsnap.qsnap_encode_chunks`` over every single-shard
+    jax.Array leaf: quantization happens on the accelerator, the D2H
+    copy carries int8 codes + scales (~4x fewer bytes than f32), and the
+    resulting ``PreEncodedLeaf``s flow through the writer's pass-through
+    encode stage. Payloads are byte-identical to the host "int8" codec,
+    so the image dedups and restores exactly like a host-compressed one.
+    Non-array leaves (python scalars in iterator state) pass through and
+    are framed losslessly by the host codec.
+    """
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    idx = [i for i, x in enumerate(flat) if _device_encodable(x)]
+    payloads = qsnap_encode_chunks([flat[i] for i in idx], impl=impl,
+                                   interpret=interpret)
+    for i, payload in zip(idx, payloads):
+        x = flat[i]
+        chunk = PreEncodedChunk(payload, "int8")
+        flat[i] = PreEncodedLeaf(
+            shape=tuple(x.shape), dtype=str(x.dtype),
+            chunks=[((0,) * x.ndim, tuple(x.shape), chunk)])
+    return jax.tree_util.tree_unflatten(treedef, flat)
+
+
 class TrainerApp:
     """A real JAX training job hosted by CACS.
 
@@ -92,6 +134,8 @@ class TrainerApp:
         self.last_loss: float = float("nan")
         self.losses: list = []
         self.step_times: list = []
+        self.ckpt_stalls: list = []          # seconds the loop was blocked
+        self._host_step = 0                  # mirrors state["step"] host-side
         self.restarts = 0
         self._started = False
 
@@ -101,6 +145,7 @@ class TrainerApp:
             with self._state_lock:
                 self._state = restore_state["state"]
                 self.pipeline.load_state_dict(restore_state["data"])
+                self._host_step = int(restore_state["data"]["step"])
             self.restarts += 1
         elif self._state is None:
             self._state = init_state(self.model, jax.random.PRNGKey(self.seed))
@@ -110,29 +155,63 @@ class TrainerApp:
         self._started = True
 
     def _run(self) -> None:
-        while not self._stop.is_set() and self.current_step < self.n_steps:
-            t0 = time.monotonic()
+        clock = active_clock()
+        while not self._stop.is_set() and self._host_step < self.n_steps:
+            t0 = clock.now()
             batch = self.pipeline.next()
             batch = {k: jnp.asarray(v) for k, v in batch.items()}
             new_state, metrics = self._train_step(self._state, batch)
             loss = float(metrics["loss"])
+            # join the step OUTSIDE the lock — a concurrent snapshot
+            # capture must never wait on device work
+            new_state = jax.block_until_ready(new_state)
             with self._state_lock:
-                self._state = jax.block_until_ready(new_state)
+                self._state = new_state
+                self._host_step += 1         # swap + count: one atomic unit
             self.last_loss = loss
             self.losses.append(loss)
-            self.step_times.append(time.monotonic() - t0)
+            self.step_times.append(clock.now() - t0)
 
     @property
     def current_step(self) -> int:
-        st = self._state
-        return int(st["step"]) if st is not None else 0
+        # host-side mirror: reading it never forces a device sync (the
+        # old int(state["step"]) stalled callers on the in-flight step)
+        return self._host_step
 
     def checkpoint_state(self) -> Dict[str, Any]:
         with self._state_lock:
             state = self._state
             data = dict(self.pipeline.state_dict())
-            data["step"] = int(state["step"])     # align stream with params
+            data["step"] = self._host_step    # align stream with params
         return {"state": state, "data": data}
+
+    def snapshot_async(self, *, step: Optional[int] = None,
+                       codec: Optional[str] = None) -> SnapshotHandle:
+        """Staged snapshot (Application protocol extension).
+
+        Capture = pin the current state dict + iterator state under the
+        lock (microseconds; jax arrays are immutable and ``_run`` swaps
+        whole dicts, so references ARE a consistent snapshot). The
+        device→host copy — or, when ``codec`` selects int8, the on-device
+        qsnap encode — happens in ``resolve()`` on the checkpoint writer
+        thread, overlapped with the next jitted step.
+        """
+        clock = active_clock()
+        t0 = clock.now()
+        with self._state_lock:
+            state = self._state
+            data = dict(self.pipeline.state_dict())
+            data["step"] = host_step = self._host_step
+        self.ckpt_stalls.append(clock.now() - t0)
+        device_encode = codec in ("int8", "int8+zlib")
+
+        def materialize():
+            if device_encode:
+                return {"state": encode_state_on_device(state), "data": data}
+            return {"state": state, "data": data}
+
+        return DeferredSnapshot(
+            materialize, step=host_step if step is None else step)
 
     def healthy(self) -> bool:
         if not self.losses:

@@ -18,6 +18,14 @@ from repro.serve.engine import Engine, ServeApp
 CFG = dataclasses.replace(reduced(get_config("repro-100m")), dtype="float32")
 
 
+@pytest.fixture(autouse=True)
+def _virtual_time(sim_clock):
+    """ServeApp's token_delay_s / capture polls sleep on active_clock();
+    riding the shared SimClock turns those delays into instant virtual
+    jumps (the suspend-resume test no longer wall-sleeps ~2.4s)."""
+    yield
+
+
 def test_engine_generate_shapes():
     model = build_model(CFG)
     params = model.init(jax.random.PRNGKey(0))

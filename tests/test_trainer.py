@@ -16,6 +16,15 @@ from repro.train import (AdamWConfig, TrainerApp, adamw_init, adamw_update,
 CFG = dataclasses.replace(reduced(get_config("repro-100m")), dtype="float32")
 
 
+@pytest.fixture(autouse=True)
+def _virtual_time(sim_clock):
+    """TrainerApp timing rides active_clock(); run the suite on the shared
+    discrete-event clock like every other timed suite. The train thread
+    itself never sleeps on the clock, so pacing is unchanged — only the
+    service-side daemons/waits go virtual."""
+    yield
+
+
 def test_pipeline_deterministic_and_checkpointable():
     p1 = TokenPipeline(CFG, 4, 16, seed=3)
     batches = [p1.next() for _ in range(5)]
