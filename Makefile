@@ -7,6 +7,7 @@
 #   make sched-smoke     seeded over-subscription scenario + property suite
 #   make gang-smoke      gang barrier overhead + outage shrink-restore MTTR
 #   make train-smoke     real-pytree device data path: stall/bytes/bit-exact
+#   make obs-smoke       telemetry loop: save spans + EWMA slowdown detection
 #   make bench-diff      fresh gated benches vs committed baselines
 #   make docs-lint       sanity-check docs: files exist, internal refs resolve
 
@@ -14,7 +15,7 @@ PY      ?= python
 PYPATH  := src
 
 .PHONY: test bench-smoke chaos-smoke failover-smoke sched-smoke gang-smoke \
-	train-smoke bench-diff docs-lint
+	train-smoke obs-smoke bench-diff docs-lint
 
 test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
@@ -43,10 +44,18 @@ train-smoke:
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only train_ckpt
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q tests/test_train_ckpt.py
 
+# seeded save/restore + slowdown-detection run; exports a Perfetto-viewable
+# Chrome trace + JSONL spans to obs-artifacts/ (CI uploads them)
+obs-smoke:
+	PYTHONPATH=$(PYPATH) $(PY) scripts/obs_smoke.py --out-dir obs-artifacts
+	PYTHONPATH=$(PYPATH) $(PY) scripts/trace_view.py \
+		obs-artifacts/obs_smoke.trace.jsonl
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only obs
+
 # bench_diff diffs EVERY committed baseline, so regenerate them all here
 bench-diff:
 	CHAOS_TRIALS=2 FAILOVER_TRIALS=1 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run \
-		--only fault_recovery,oversubscription,gang,replication,train_ckpt \
+		--only fault_recovery,oversubscription,gang,replication,train_ckpt,obs \
 		--json-dir bench-results
 	$(PY) scripts/bench_diff.py --fresh bench-results
 

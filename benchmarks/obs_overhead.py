@@ -1,0 +1,69 @@
+"""Telemetry-overhead guard (ISSUE 9 satellite).
+
+The metrics registry + span tracer instrument the hot checkpoint path
+(every encode/upload gets a span, every save mirrors its stats). This
+benchmark bounds what that costs: the SAME blocking save + restore is
+timed with telemetry fully enabled vs fully disabled (fresh registry and
+tracer with ``enabled=False`` — the mutators' cheapest early-out), reps
+interleaved so drift hits both sides alike, min-of-reps compared.
+
+``overhead_ok`` is exact-gated in scripts/bench_diff.py: the enabled run
+must stay within ``MAX_OVERHEAD`` (5%) of the disabled one. zlib work on
+a multi-leaf multi-MB state keeps the denominator honest — this measures
+span cost against real codec work, not against a no-op.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+from repro.ckpt import InMemoryStore, restore, save_checkpoint
+from repro.obs import (MetricsRegistry, Tracer, use_registry, use_tracer)
+
+N_LEAVES = 48
+LEAF_ELEMS = 24_000           # float64 -> ~9 MB total, 48 encode/upload spans
+REPS = 5
+MAX_OVERHEAD = 0.05
+
+
+def _state() -> dict:
+    rng = np.random.Generator(np.random.PCG64(0))
+    # cumsum makes the data solver-field-like: zlib does real work
+    return {f"leaf{i:03d}": np.cumsum(rng.standard_normal(LEAF_ELEMS) * 1e-3)
+            for i in range(N_LEAVES)}
+
+
+def _one_pass(state: dict) -> float:
+    store = InMemoryStore()
+    t0 = time.perf_counter()
+    save_checkpoint(store, "bench", 1, state, codec="zlib")
+    restore(store, "bench")
+    return time.perf_counter() - t0
+
+
+def run() -> None:
+    state = _state()
+    # warm up allocators/zlib outside the timed reps
+    with use_registry(MetricsRegistry()), use_tracer(Tracer()):
+        _one_pass(state)
+    on, off = [], []
+    for _ in range(REPS):
+        with use_registry(MetricsRegistry()), use_tracer(Tracer()):
+            on.append(_one_pass(state))
+        with use_registry(MetricsRegistry(enabled=False)), \
+                use_tracer(Tracer(enabled=False)):
+            off.append(_one_pass(state))
+    t_on, t_off = min(on), min(off)
+    frac = (t_on - t_off) / t_off
+    emit("obs", "ckpt_path", "enabled_s", t_on)
+    emit("obs", "ckpt_path", "disabled_s", t_off)
+    # clamp at 0: an enabled run that wins on noise is zero overhead, and
+    # bench_diff's sanity floor rejects negative values by design
+    emit("obs", "ckpt_path", "overhead_frac", max(0.0, frac))
+    emit("obs", "ckpt_path", "overhead_ok", float(frac < MAX_OVERHEAD))
+
+
+if __name__ == "__main__":
+    run()

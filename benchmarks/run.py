@@ -21,7 +21,7 @@ import traceback
 
 ALL = ("fig3", "table2", "table2incr", "fig4", "fig5", "fig6",
        "ckpt_path", "pplane", "fault_recovery", "replication",
-       "oversubscription", "gang", "train_ckpt")
+       "oversubscription", "gang", "train_ckpt", "obs")
 
 
 def main() -> None:
@@ -35,8 +35,8 @@ def main() -> None:
 
     from benchmarks import (ckpt_path, fault_recovery, fig3_scalability,
                             fig4_service_load, fig5_migration, fig6_backends,
-                            gang, oversubscription, parallel_plane,
-                            replication, table2_image_size,
+                            gang, obs_overhead, oversubscription,
+                            parallel_plane, replication, table2_image_size,
                             table2_incremental, train_ckpt)
     from benchmarks.common import CSV_ROWS
 
@@ -54,6 +54,7 @@ def main() -> None:
         "oversubscription": oversubscription,
         "gang": gang,
         "train_ckpt": train_ckpt,
+        "obs": obs_overhead,
     }
     print("bench,param,metric,value")
     failures = 0

@@ -40,6 +40,8 @@ EXACT_METRICS = {
     "restore_bitexact",           # async device path restores losslessly
     "floor3x_ok",                 # device-exit byte cut (deterministic)
     "floor5x_ok",                 # staged-capture stall cut vs sync save
+    "telemetry_detected",         # slowdowns caught by the EWMA watchdog
+    "overhead_ok",                # telemetry cost on the ckpt path < 5%
 }
 
 

@@ -1,0 +1,127 @@
+#!/usr/bin/env python
+"""Observability smoke: one seeded run, one correlated trace (ISSUE 9).
+
+Runs the full telemetry loop on the discrete-event ``SimClock``:
+
+  1. a GlobalScheduler places one job (sched/submit + placement events);
+  2. an explicit checkpoint drives the save lifecycle — pin, encode,
+     upload, manifest, commit spans;
+  3. a degraded host starves the job until the throughput-EWMA watchdog
+     (NOT the liveness path — the straggler check is disabled) reports
+     low performance and the app manager proactively suspends it.
+
+Every one of those records carries the job's deterministic trace_id; the
+script hard-verifies the correlation, then exports the trace as JSONL
+(for scripts/trace_view.py) and Chrome trace-event JSON (open in
+https://ui.perfetto.dev). CI runs this via ``make obs-smoke`` and
+uploads the exports as artifacts. Exit status is non-zero on any
+missing span, so it doubles as a regression gate.
+
+Usage::
+
+    PYTHONPATH=src python scripts/obs_smoke.py [--out-dir obs-artifacts]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), os.pardir,
+                                "src"))
+
+from repro.clusters import SnoozeBackend
+from repro.core.application import SimulatedApp
+from repro.core.coordinator import ASR, CheckpointPolicy, CoordState
+from repro.core.monitoring import LowPerfConfig
+from repro.core.scheduler import GlobalScheduler
+from repro.core.service import CACSService
+from repro.obs import (MetricsRegistry, Tracer, use_registry, use_tracer)
+from repro.sim import SimClock, use_clock
+
+# the save path must show this lifecycle, the monitor its detection, the
+# scheduler its placement decision — all under ONE trace_id
+REQUIRED_SPANS = (
+    ("ckpt", "ckpt/pin"),
+    ("ckpt", "ckpt/save"),
+    ("ckpt", "ckpt/encode"),
+    ("ckpt", "ckpt/upload"),
+    ("ckpt", "ckpt/manifest"),
+    ("ckpt", "ckpt/commit"),
+    ("sched", "sched/submit"),
+    ("monitor", "monitor/poll"),
+    ("monitor", "monitor/low_performance"),
+)
+
+
+def run(out_dir: str) -> int:
+    backend = SnoozeBackend(n_hosts=8)
+    svc = CACSService({backend.name: backend})
+    svc.apps.monitor.straggler_threshold = float("inf")
+    svc.apps.monitor.poll_interval_s = 0.01
+    svc.apps.monitor.lowperf = LowPerfConfig(warmup_samples=2)
+    sched = GlobalScheduler(svc)           # synchronous ticks (no thread)
+    svc.attach_scheduler(sched)
+    asr = ASR(name="obs-smoke", n_vms=2, backend=backend.name,
+              app_factory=lambda: SimulatedApp(iter_time_s=0.4,
+                                               state_mb=0.05),
+              policy=CheckpointPolicy(period_s=0.0))
+    cid = sched.submit(asr)
+    try:
+        coord = svc.wait_for_state(cid, CoordState.RUNNING, timeout=60)
+        trace_id = coord.trace_id
+        step = svc.trigger_checkpoint(cid)
+        print(f"committed step {step} for {cid} ({trace_id})")
+        # starve the job: 40x steps drop throughput well past the
+        # degradation factor; the EWMA watchdog must suspend it
+        backend.sim.degrade_host(coord.vms[0].host.host_id, 40.0)
+        svc.wait_for_state(cid, CoordState.SUSPENDED, timeout=60)
+        reason = next((r[2] for r in coord.history
+                       if r[1] == "SUSPENDED" and len(r) > 2), "")
+        print(f"suspended via {reason!r}")
+        if reason != "low_performance":
+            print(f"FAIL: suspend reason {reason!r}, expected telemetry "
+                  f"detection (low_performance)")
+            return 1
+    finally:
+        svc.shutdown()
+    return verify_and_export(trace_id, out_dir)
+
+
+def verify_and_export(trace_id: str, out_dir: str) -> int:
+    from repro.obs import tracer
+    tr = tracer()
+    errors = 0
+    for cat, name in REQUIRED_SPANS:
+        n = len(tr.spans(cat=cat, trace_id=trace_id, name=name))
+        mark = "ok  " if n else "FAIL"
+        print(f"{mark} {cat:<8} {name:<26} x{n} [{trace_id}]")
+        errors += int(n == 0)
+    os.makedirs(out_dir, exist_ok=True)
+    jsonl = os.path.join(out_dir, "obs_smoke.trace.jsonl")
+    chrome = os.path.join(out_dir, "obs_smoke.chrome.json")
+    n = tr.export_jsonl(jsonl)
+    tr.export_chrome(chrome)
+    print(f"exported {n} spans -> {jsonl}")
+    print(f"Perfetto view: load {chrome} at https://ui.perfetto.dev")
+    if errors:
+        print(f"FAIL: {errors} required span kinds missing")
+    return errors
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="obs-artifacts")
+    args = ap.parse_args()
+    clk = SimClock()
+    try:
+        with use_clock(clk), use_registry(MetricsRegistry()), \
+                use_tracer(Tracer()):
+            errors = run(args.out_dir)
+    finally:
+        clk.close()
+    sys.exit(1 if errors else 0)
+
+
+if __name__ == "__main__":
+    main()

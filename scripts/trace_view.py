@@ -1,0 +1,103 @@
+#!/usr/bin/env python
+"""Summarize a JSONL span export (repro.obs.trace.Tracer.export_jsonl).
+
+Usage::
+
+    python scripts/trace_view.py trace.jsonl [--trace tr-job-0000]
+                                             [--cat ckpt] [--tree]
+
+Default output is one row per (cat, name): span count, total/mean/max
+duration in paper-seconds, plus how many distinct trace_ids touched it.
+``--tree`` instead prints each trace_id's spans nested by parent, in
+start order — the save pin→encode→upload→commit lifecycle reads top to
+bottom. Both views work on the deterministic canonical export, so two
+seeded runs summarize identically.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from collections import defaultdict
+from typing import Any, Dict, List
+
+
+def load(path: str) -> List[Dict[str, Any]]:
+    rows = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                rows.append(json.loads(line))
+    return rows
+
+
+def summarize(rows: List[Dict[str, Any]]) -> str:
+    stats: Dict[tuple, Dict[str, Any]] = defaultdict(
+        lambda: {"n": 0, "total": 0.0, "max": 0.0, "traces": set()})
+    for r in rows:
+        st = stats[(r.get("cat", ""), r["name"])]
+        st["n"] += 1
+        st["total"] += r.get("dur", 0.0)
+        st["max"] = max(st["max"], r.get("dur", 0.0))
+        st["traces"].add(r.get("trace_id", ""))
+    header = (f"{'cat':<12} {'name':<28} {'count':>6} {'total_s':>10} "
+              f"{'mean_s':>10} {'max_s':>10} {'traces':>7}")
+    lines = [header, "-" * len(header)]
+    for (cat, name), st in sorted(stats.items()):
+        mean = st["total"] / st["n"]
+        lines.append(f"{cat:<12} {name:<28} {st['n']:>6} "
+                     f"{st['total']:>10.4f} {mean:>10.4f} "
+                     f"{st['max']:>10.4f} {len(st['traces']):>7}")
+    lines.append(f"{len(rows)} spans")
+    return "\n".join(lines)
+
+
+def tree(rows: List[Dict[str, Any]]) -> str:
+    by_id = {r["id"]: r for r in rows}
+    kids: Dict[Any, List[Dict[str, Any]]] = defaultdict(list)
+    for r in rows:
+        parent = r.get("parent")
+        kids[parent if parent in by_id else None].append(r)
+    for children in kids.values():
+        children.sort(key=lambda r: (r.get("trace_id", ""), r["ts"],
+                                     r["id"]))
+    lines: List[str] = []
+
+    def walk(r: Dict[str, Any], depth: int) -> None:
+        dur = r.get("dur", 0.0)
+        tag = f"{dur:.4f}s" if dur > 0 else "·"
+        lines.append(f"{'  ' * depth}{r['name']} [{r.get('cat', '')}] {tag}")
+        for c in kids.get(r["id"], ()):
+            walk(c, depth + 1)
+
+    last_trace = object()
+    for r in kids[None]:
+        if r.get("trace_id", "") != last_trace:
+            last_trace = r.get("trace_id", "")
+            lines.append(f"== trace {last_trace or '(untraced)'} ==")
+        walk(r, 1)
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("path", help="JSONL span export")
+    ap.add_argument("--trace", default=None, help="filter by trace_id")
+    ap.add_argument("--cat", default=None, help="filter by category")
+    ap.add_argument("--tree", action="store_true",
+                    help="print spans nested by parent instead of the table")
+    args = ap.parse_args()
+    rows = load(args.path)
+    if args.trace is not None:
+        rows = [r for r in rows if r.get("trace_id") == args.trace]
+    if args.cat is not None:
+        rows = [r for r in rows if r.get("cat") == args.cat]
+    if not rows:
+        print("no spans match", file=sys.stderr)
+        sys.exit(1)
+    print(tree(rows) if args.tree else summarize(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -31,6 +31,9 @@ import dataclasses
 import threading
 from typing import Dict, Optional, Tuple
 
+from repro.obs.telemetry import registry
+from repro.sim.simtime import active_clock
+
 
 @dataclasses.dataclass(frozen=True)
 class PreEncodedChunk:
@@ -119,20 +122,38 @@ class ByteBudget:
     ``acquire`` blocks while the budget is exhausted — except that a
     single item larger than the whole budget is always admitted when the
     pipeline is empty, so an oversized chunk can never deadlock the save.
+
+    ``name`` prefixes the telemetry this budget publishes (the save path
+    and replication each own a budget): ``<name>.budget_wait_s`` histogram
+    of admission stalls and a ``<name>.inflight_bytes`` high-water gauge.
     """
 
-    def __init__(self, limit: int):
+    def __init__(self, limit: int, name: str = "plane"):
         self._limit = limit
         self._used = 0
         self._cv = threading.Condition()
+        self._metric = name
 
     def acquire(self, nbytes: int) -> None:
         if self._limit <= 0:
             return
+        reg = registry()
         with self._cv:
-            while self._used > 0 and self._used + nbytes > self._limit:
-                self._cv.wait()
+            if reg.enabled and self._used > 0 \
+                    and self._used + nbytes > self._limit:
+                clk = active_clock()
+                t0 = clk.now()
+                while self._used > 0 and self._used + nbytes > self._limit:
+                    self._cv.wait()
+                reg.observe(f"{self._metric}.budget_wait_s",
+                            (clk.now() - t0) / clk.scale)
+            else:
+                while self._used > 0 and self._used + nbytes > self._limit:
+                    self._cv.wait()
             self._used += nbytes
+            if reg.enabled:
+                reg.gauge_max(f"{self._metric}.inflight_bytes",
+                              float(self._used))
 
     def release(self, nbytes: int) -> None:
         if self._limit <= 0:

@@ -33,6 +33,7 @@ from repro.ckpt.layout import (COMMITTED, MANIFEST, LeafInfo, Manifest,
                                leaf_items, np_dtype, step_prefix)
 from repro.ckpt.plane import DataPlaneConfig, shared_executor
 from repro.ckpt.storage import ObjectStore
+from repro.obs.trace import tracer
 
 _STEP_RE = re.compile(r"step_(\d+)/COMMITTED$")
 
@@ -126,11 +127,15 @@ class _ChunkSource:
 
     def __init__(self, store: ObjectStore, codec: str,
                  prefix: Optional[str], pool: Optional[cf.Executor],
-                 max_inflight_bytes: int = 0):
+                 max_inflight_bytes: int = 0, trace_id: str = ""):
         self._store = store
         self._codec = codec
         self._prefix = prefix
         self._pool = pool
+        # per-chunk spans on pool threads parent explicitly on the restore
+        # root span open on the constructing thread
+        self._trace_id = trace_id
+        self._span = tracer().current()
         self._budget = max_inflight_bytes
         self._lock = threading.Lock()
         self._futs: Dict[tuple, cf.Future] = {}
@@ -153,10 +158,16 @@ class _ChunkSource:
                 self._queue.append((ck, li, chunk))
         self._pump()
 
+    def _read_traced(self, li: LeafInfo, chunk) -> np.ndarray:
+        with tracer().span("restore/fetch_decode", cat="ckpt",
+                           trace_id=self._trace_id, parent=self._span,
+                           args={"leaf": li.name}):
+            return _read_chunk(self._store, li, chunk, self._codec,
+                               self._prefix)
+
     def _submit_locked(self, ck, li, chunk) -> cf.Future:
         self._inflight += max(1, chunk.nbytes)
-        fut = self._pool.submit(_read_chunk, self._store, li, chunk,
-                                self._codec, self._prefix)
+        fut = self._pool.submit(self._read_traced, li, chunk)
         self._futs[ck] = fut
         return fut
 
@@ -185,7 +196,7 @@ class _ChunkSource:
                     fut = self._submit_locked(ck, li, chunk)
         if fut is not None:
             return fut.result()
-        arr = _read_chunk(self._store, li, chunk, self._codec, self._prefix)
+        arr = self._read_traced(li, chunk)
         with self._lock:
             self._cache[ck] = arr
         return arr
@@ -285,7 +296,8 @@ def _restore_leaf(source: _ChunkSource, li: LeafInfo,
 def restore(store: ObjectStore, prefix: str, step: Optional[int] = None, *,
             target: Any = None,
             shardings: Any = None,
-            plane: Optional[DataPlaneConfig] = None
+            plane: Optional[DataPlaneConfig] = None,
+            trace_id: str = ""
             ) -> Tuple[Any, Manifest]:
     """Restore a checkpoint.
 
@@ -296,48 +308,53 @@ def restore(store: ObjectStore, prefix: str, step: Optional[int] = None, *,
                structure or the skeleton) — THE cross-mesh migration hook.
     plane:     parallel data-plane knobs; fetch_workers concurrent chunk
                fetch+decodes (None = DataPlaneConfig()).
+    trace_id:  correlates the emitted restore spans with the owning job.
     """
     if step is None:
         step = latest_step(store, prefix)
         if step is None:
             raise FileNotFoundError(f"no committed checkpoints under {prefix}")
-    manifest = load_manifest(store, prefix, step)
-    plane = plane or DataPlaneConfig()
+    with tracer().span("ckpt/restore", cat="ckpt", trace_id=trace_id,
+                       args={"step": step}):
+        manifest = load_manifest(store, prefix, step)
+        plane = plane or DataPlaneConfig()
 
-    shard_by_name: Dict[str, Any] = {}
-    if shardings is not None:
-        shard_by_name = dict(leaf_items(shardings))
-    dtype_by_name: Dict[str, Any] = {}
-    if target is not None:
-        for name, leaf in leaf_items(target):
-            if hasattr(leaf, "dtype"):
-                dtype_by_name[name] = leaf.dtype
+        shard_by_name: Dict[str, Any] = {}
+        if shardings is not None:
+            shard_by_name = dict(leaf_items(shardings))
+        dtype_by_name: Dict[str, Any] = {}
+        if target is not None:
+            for name, leaf in leaf_items(target):
+                if hasattr(leaf, "dtype"):
+                    dtype_by_name[name] = leaf.dtype
 
-    pool = None
-    if plane.fetch_workers > 1:
-        pool = shared_executor("fetch", plane.fetch_workers)
-    source = _ChunkSource(store, manifest.codec, prefix, pool,
-                          plane.max_inflight_bytes)
-    try:
-        # plan all leaves first, registering every (region, chunk) use so
-        # the source can prefetch each distinct decode exactly once and
-        # evict it after its last assembly …
-        plans: Dict[str, tuple] = {}
-        for name, li in manifest.leaves.items():
-            regions = _leaf_regions(li, shard_by_name.get(name))
-            plans[name] = regions
-            for chunk in li.chunks:
-                for _, off, shp in regions:
-                    if _overlap(off, shp, chunk.offset, chunk.shape):
-                        source.register(li, chunk)
-        # … then assemble in deterministic manifest order
-        leaves: Dict[str, Any] = {}
-        for name, li in manifest.leaves.items():
-            leaves[name] = _restore_leaf(
-                source, li, shard_by_name.get(name), plans[name],
-                dtype_by_name.get(name))
-    except BaseException:
-        source.cancel_pending()      # don't leave queued fetches running
-        raise
-    tree = build_from_skeleton(manifest.skeleton, leaves)
-    return tree, manifest
+        pool = None
+        if plane.fetch_workers > 1:
+            pool = shared_executor("fetch", plane.fetch_workers)
+        source = _ChunkSource(store, manifest.codec, prefix, pool,
+                              plane.max_inflight_bytes, trace_id=trace_id)
+        try:
+            # plan all leaves first, registering every (region, chunk) use
+            # so the source can prefetch each distinct decode exactly once
+            # and evict it after its last assembly …
+            plans: Dict[str, tuple] = {}
+            with tracer().span("restore/plan", cat="ckpt"):
+                for name, li in manifest.leaves.items():
+                    regions = _leaf_regions(li, shard_by_name.get(name))
+                    plans[name] = regions
+                    for chunk in li.chunks:
+                        for _, off, shp in regions:
+                            if _overlap(off, shp, chunk.offset, chunk.shape):
+                                source.register(li, chunk)
+            # … then assemble in deterministic manifest order
+            leaves: Dict[str, Any] = {}
+            with tracer().span("restore/assemble", cat="ckpt"):
+                for name, li in manifest.leaves.items():
+                    leaves[name] = _restore_leaf(
+                        source, li, shard_by_name.get(name), plans[name],
+                        dtype_by_name.get(name))
+        except BaseException:
+            source.cancel_pending()  # don't leave queued fetches running
+            raise
+        tree = build_from_skeleton(manifest.skeleton, leaves)
+        return tree, manifest

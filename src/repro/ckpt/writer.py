@@ -53,6 +53,8 @@ from repro.ckpt.plane import (ByteBudget, DataPlaneConfig, PreEncodedChunk,
                               SingleFlight, shared_executor)
 from repro.ckpt.snapshot import SnapshotHandle, resolve_state
 from repro.ckpt.storage import ObjectStore
+from repro.obs.telemetry import registry
+from repro.obs.trace import tracer
 
 
 def _stage(tree: Any) -> List[Tuple[str, str, Tuple[int, ...], str,
@@ -132,7 +134,8 @@ def known_digests(store: ObjectStore, prefix: str,
 def save_checkpoint(store: ObjectStore, prefix: str, step: int, tree: Any, *,
                     codec: str = "raw", incremental: bool = True,
                     metadata: Optional[Dict[str, Any]] = None,
-                    plane: Optional[DataPlaneConfig] = None) -> Manifest:
+                    plane: Optional[DataPlaneConfig] = None,
+                    trace_id: str = "") -> Manifest:
     """Blocking save. Returns the committed manifest.
 
     incremental=True (default) writes format-v2 content-addressed chunks and
@@ -140,12 +143,18 @@ def save_checkpoint(store: ObjectStore, prefix: str, step: int, tree: Any, *,
     incremental=False writes the legacy step-private v1 layout.
     plane configures the parallel data plane (None = DataPlaneConfig()).
     ``tree`` may be a SnapshotHandle (resolved here — blocking save).
+    trace_id correlates the emitted save spans with the owning job.
     """
-    tree = resolve_state(tree)
-    staged = _stage(tree)
-    skeleton = structure_skeleton(tree)
-    return _write_staged(store, prefix, step, staged, skeleton, codec,
-                         metadata or {}, incremental=incremental, plane=plane)
+    with tracer().span("ckpt/save", cat="ckpt", trace_id=trace_id,
+                       args={"step": step, "codec": codec,
+                             "blocking": True}):
+        with tracer().span("ckpt/materialize", cat="ckpt"):
+            tree = resolve_state(tree)
+            staged = _stage(tree)
+            skeleton = structure_skeleton(tree)
+        return _write_staged(store, prefix, step, staged, skeleton, codec,
+                             metadata or {}, incremental=incremental,
+                             plane=plane, trace_id=trace_id)
 
 
 class _SaveContext:
@@ -159,10 +168,16 @@ class _SaveContext:
     def __init__(self, store: ObjectStore, prefix: str, codec: str,
                  incremental: bool, known: Optional[Dict[str, int]],
                  raw_cache: Optional[Dict[str, Tuple[str, int]]],
-                 plane: DataPlaneConfig, cas_scope: str = ""):
+                 plane: DataPlaneConfig, cas_scope: str = "",
+                 trace_id: str = ""):
         self.store = store
         self.prefix = prefix
         self.codec = codec
+        # span context for per-chunk stages: pool threads cannot see the
+        # caller's thread-local span stack, so they parent explicitly on
+        # the save's root span captured here (None when untraced)
+        self.trace_id = trace_id
+        self.span = tracer().current()
         # CAS key namespace tag: chunks land at <prefix>/cas/<scope><digest>.
         # Gang saves scope each rank's uploads ("r<rank>-") so one rank's
         # puts are distinguishable — per-rank fault injection and per-rank
@@ -175,7 +190,7 @@ class _SaveContext:
         self.raw_flight = SingleFlight(self.lock)
         self.put_flight = SingleFlight(self.lock)
         self.budget = ByteBudget(0 if plane.serial_save
-                                 else plane.max_inflight_bytes)
+                                 else plane.max_inflight_bytes, name="ckpt")
         self.stats = {"chunks": 0, "dedup_hits": 0, "dedup_misses": 0,
                       "bytes_written": 0, "bytes_deduped": 0}
 
@@ -219,6 +234,13 @@ def _encode_chunk(ctx: _SaveContext, step: int, name: str, off, shp,
     reduces to adapt + digest (the raw cache is skipped: there is no raw
     buffer, and no encode to save).
     """
+    with tracer().span("ckpt/encode", cat="ckpt", trace_id=ctx.trace_id,
+                       parent=ctx.span, args={"leaf": name}):
+        return _encode_chunk_inner(ctx, step, name, off, shp, host, dtype)
+
+
+def _encode_chunk_inner(ctx: _SaveContext, step: int, name: str, off, shp,
+                        host, dtype: str) -> _Encoded:
     if isinstance(host, PreEncodedChunk):
         data = _adapt_pre_encoded(host, ctx.codec)
         if not ctx.incremental:
@@ -253,6 +275,12 @@ def _encode_chunk(ctx: _SaveContext, step: int, name: str, off, shp,
 
 def _upload_chunk(ctx: _SaveContext, enc: _Encoded) -> ChunkInfo:
     """Stage 2: dedup-aware store put (IO-bound, upload pool)."""
+    with tracer().span("ckpt/upload", cat="ckpt", trace_id=ctx.trace_id,
+                       parent=ctx.span, args={"nbytes": len(enc.data)}):
+        return _upload_chunk_inner(ctx, enc)
+
+
+def _upload_chunk_inner(ctx: _SaveContext, enc: _Encoded) -> ChunkInfo:
     if not ctx.incremental:                      # legacy v1: plain put
         ctx.store.put(enc.key, enc.data)
         ctx.count_miss(len(enc.data))
@@ -359,7 +387,8 @@ def _write_staged(store: ObjectStore, prefix: str, step: int, staged,
                   incremental: bool = True,
                   known: Optional[Dict[str, int]] = None,
                   raw_cache: Optional[Dict[str, Tuple[str, int]]] = None,
-                  plane: Optional[DataPlaneConfig] = None) -> Manifest:
+                  plane: Optional[DataPlaneConfig] = None,
+                  trace_id: str = "") -> Manifest:
     """Serialize + upload staged shards, then atomically commit.
 
     known:     digest -> nbytes of chunks guaranteed live in the store
@@ -372,7 +401,7 @@ def _write_staged(store: ObjectStore, prefix: str, step: int, staged,
     if incremental and known is None:
         known = known_digests(store, prefix, before_step=step)
     ctx = _SaveContext(store, prefix, codec, incremental, known, raw_cache,
-                       plane)
+                       plane, trace_id=trace_id)
     leaves = upload_staged(ctx, plane, step, staged)
     manifest = Manifest(step=step, codec=codec, leaves=leaves,
                         skeleton=skeleton,
@@ -380,11 +409,21 @@ def _write_staged(store: ObjectStore, prefix: str, step: int, staged,
                                   "dedup": ctx.stats},
                         version=2 if incremental else 1)
     sp = step_prefix(prefix, step)
-    store.put(f"{sp}/{MANIFEST}", manifest.to_json().encode())
-    store.flush()                                  # durable before commit
-    store.put(f"{sp}/{COMMITTED}", b"1")
-    store.flush()           # marker durable too: a host that loses its fast
-    return manifest         # tier right after save still sees the commit
+    tr = tracer()
+    with tr.span("ckpt/manifest", cat="ckpt", trace_id=trace_id,
+                 parent=ctx.span, args={"step": step}):
+        store.put(f"{sp}/{MANIFEST}", manifest.to_json().encode())
+    with tr.span("ckpt/commit", cat="ckpt", trace_id=trace_id,
+                 parent=ctx.span, args={"step": step}):
+        store.flush()                              # durable before commit
+        store.put(f"{sp}/{COMMITTED}", b"1")
+        store.flush()       # marker durable too: a host that loses its fast
+    reg = registry()        # tier right after save still sees the commit
+    if reg.enabled:
+        for k, v in ctx.stats.items():
+            reg.inc(f"ckpt.{k}", v)
+        reg.inc("ckpt.saves")
+    return manifest
 
 
 class AsyncCheckpointer:
@@ -409,10 +448,12 @@ class AsyncCheckpointer:
 
     def __init__(self, store: ObjectStore, prefix: str, *,
                  codec: str = "raw", incremental: bool = True,
-                 plane: Optional[DataPlaneConfig] = None):
+                 plane: Optional[DataPlaneConfig] = None,
+                 trace_id: str = ""):
         self.store = store
         self.prefix = prefix
         self.codec = codec
+        self.trace_id = trace_id
         self.incremental = incremental
         self.plane = plane or DataPlaneConfig()
         self._pool = cf.ThreadPoolExecutor(max_workers=1,
@@ -453,31 +494,42 @@ class AsyncCheckpointer:
         if isinstance(tree, SnapshotHandle):
             staged = skeleton = None               # resolved on writer thread
         else:
-            staged = _stage(tree)                  # sync: consistent snapshot
-            skeleton = structure_skeleton(tree)
+            with tracer().span("ckpt/stage", cat="ckpt",
+                               trace_id=self.trace_id,
+                               args={"step": step}):
+                staged = _stage(tree)              # sync: consistent snapshot
+                skeleton = structure_skeleton(tree)
         self.staging_time += time.monotonic() - t0
         save_codec = codec or self.codec
 
         def job():
-            if staged is None:
-                state = tree.resolve()             # off the app's hot path
-                job_staged = _stage(state)
-                job_skeleton = structure_skeleton(state)
-            else:
-                job_staged, job_skeleton = staged, skeleton
-            if self.incremental and self._known is None:
-                self._known = known_digests(self.store, self.prefix,
-                                            before_step=step)
-            man = _write_staged(self.store, self.prefix, step, job_staged,
-                                job_skeleton, save_codec, metadata or {},
-                                incremental=self.incremental,
-                                known=self._known, raw_cache=self._raw_cache,
-                                plane=self.plane)
-            self._absorb(man)
-            with self._lock:
-                self.last_committed = step
-            if on_commit is not None:
-                on_commit(step)
+            with tracer().span("ckpt/save", cat="ckpt",
+                               trace_id=self.trace_id,
+                               args={"step": step, "codec": save_codec,
+                                     "blocking": False}):
+                if staged is None:
+                    with tracer().span("ckpt/materialize", cat="ckpt"):
+                        state = tree.resolve()     # off the app's hot path
+                        job_staged = _stage(state)
+                        job_skeleton = structure_skeleton(state)
+                else:
+                    job_staged, job_skeleton = staged, skeleton
+                if self.incremental and self._known is None:
+                    self._known = known_digests(self.store, self.prefix,
+                                                before_step=step)
+                man = _write_staged(self.store, self.prefix, step,
+                                    job_staged, job_skeleton, save_codec,
+                                    metadata or {},
+                                    incremental=self.incremental,
+                                    known=self._known,
+                                    raw_cache=self._raw_cache,
+                                    plane=self.plane,
+                                    trace_id=self.trace_id)
+                self._absorb(man)
+                with self._lock:
+                    self.last_committed = step
+                if on_commit is not None:
+                    on_commit(step)
         with self._lock:
             self._inflight = self._pool.submit(job)
             self.save_count += 1

@@ -15,26 +15,47 @@ from __future__ import annotations
 import concurrent.futures as cf
 import threading
 import traceback
-from typing import Any, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 from repro.clusters.base import SimBackend
 from repro.clusters.simulator import CapacityError
 from repro.core.application import AppContext, snapshot_of
 from repro.core.checkpoint_manager import CheckpointManager
 from repro.core.cloud_manager import CloudManager
+from repro.obs.telemetry import registry
+from repro.obs.trace import tracer
 from repro.sim.simtime import active_clock
 from repro.core.coordinator import (ASR, Coordinator, CoordinatorDB,
                                     CoordState, InvalidTransition)
 from repro.core.gang import GANG_ROUTED, GANG_SHARDED, GangCoordinator
-from repro.core.monitoring import MonitoringManager
+from repro.core.monitoring import LowPerfConfig, MonitoringManager
 from repro.core.provision import ProvisionManager
+
+
+def progress_counter(app: Any) -> Optional[Callable[[], float]]:
+    """Monotonic progress counter for the monitor's throughput gauge:
+    Trainer steps, Serve tokens, gang min-iteration, SimulatedApp
+    iterations — falling back to ``progress()`` when nothing better
+    exists. None when the app exposes no usable counter."""
+    for attr in ("current_step", "generated", "iteration"):
+        if hasattr(app, attr):
+            def fn(a=app, name=attr) -> float:
+                v = getattr(a, name)
+                return float(v() if callable(v) else v)
+            return fn
+    if hasattr(app, "min_iteration"):
+        return lambda: float(app.min_iteration())
+    if hasattr(app, "progress"):
+        return lambda: float(app.progress())
+    return None
 
 
 class AppManager:
     def __init__(self, db: CoordinatorDB, cloud: CloudManager,
                  provision: ProvisionManager, ckpt: CheckpointManager,
                  workers: int = 100, recover_retries: int = 2,
-                 retry_backoff_s: float = 0.02):
+                 retry_backoff_s: float = 0.02,
+                 lowperf: Optional[LowPerfConfig] = None):
         self.db = db
         self.cloud = cloud
         self.provision = provision
@@ -43,7 +64,8 @@ class AppManager:
         # threads" (§6.5) — sized for the paper's 100-concurrent-apps test.
         self.pool = cf.ThreadPoolExecutor(max_workers=workers,
                                           thread_name_prefix="appmgr")
-        self.monitor = MonitoringManager(self._on_monitor_event)
+        self.monitor = MonitoringManager(self._on_monitor_event,
+                                         lowperf=lowperf)
         self._ckpt_daemon_stop = threading.Event()
         self._ckpt_daemon: Optional[threading.Thread] = None
         self._next_ckpt: Dict[str, float] = {}
@@ -145,7 +167,9 @@ class AppManager:
             return False
         native = backend.supports_failure_notifications
         hook = asr.health_hook or (lambda: coord.app.healthy())
-        self.monitor.watch(coord.coord_id, coord.vms, hook, native)
+        self.monitor.watch(coord.coord_id, coord.vms, hook, native,
+                           perf_fn=progress_counter(coord.app),
+                           trace_id=coord.trace_id)
         if asr.policy.period_s > 0:
             clk = active_clock()
             self._next_ckpt[coord.coord_id] = (
@@ -204,7 +228,12 @@ class AppManager:
             # by reading app state under the lock — only the step number
             # is claimed here. Staged apps hand back a handle in
             # microseconds; materialization runs on the writer thread.
-            state = None if coord.asr.gang else snapshot_of(coord.app)
+            if coord.asr.gang:
+                state = None
+            else:
+                with tracer().span("ckpt/pin", cat="ckpt",
+                                   trace_id=coord.trace_id):
+                    state = snapshot_of(coord.app)
             # claim the step under the lock: a concurrent suspend (or a
             # second checkpoint_now) must not mint the same step number
             step = self._step_counter.get(coord_id, 0) + 1
@@ -247,11 +276,13 @@ class AppManager:
                     continue
                 try:
                     self.checkpoint_now(coord_id, blocking=False)
-                except Exception:                  # noqa: BLE001
+                except Exception as e:             # noqa: BLE001
                     # state raced (RuntimeError) or the store faulted
                     # (IOError): one app's bad save must not kill the
-                    # periodic daemon for every app — skip this period
-                    pass
+                    # periodic daemon for every app — skip this period,
+                    # but leave a telemetry breadcrumb instead of vanishing
+                    registry().inc("appmgr.daemon_errors",
+                                   note=f"{type(e).__name__}: {e}")
                 self._next_ckpt[coord_id] = (
                     now + clk.from_wall(coord.asr.policy.period_s))
 
@@ -263,11 +294,19 @@ class AppManager:
             coord = self.db.get(coord_id)
         except KeyError:
             return
-        if kind == "straggler":
+        if kind in ("straggler", "low_performance"):
             action = getattr(coord.asr, "straggler_action", "suspend")
-            if action == "suspend":
+            done = False
+            if coord.app is not None:
+                try:
+                    done = bool(coord.app.is_done())
+                except Exception:                  # noqa: BLE001
+                    done = False
+            if action == "suspend" and not done:
+                # the suspend reason keeps the detection path attributable
+                # (chaos reads it to distinguish telemetry from liveness)
                 self._submit_once(coord_id, self._suspend_if_running,
-                                  coord_id, "straggler")
+                                  coord_id, kind)
             return
         self._submit_once(coord_id, self._recover, coord_id, kind)
 
@@ -298,7 +337,9 @@ class AppManager:
     def _guarded(self, fn, *args) -> None:
         try:
             fn(*args)
-        except Exception:                          # noqa: BLE001
+        except Exception as e:                     # noqa: BLE001
+            registry().inc("appmgr.op_errors",
+                           note=f"{type(e).__name__}: {e}")
             traceback.print_exc()
 
     def _suspend_if_running(self, coord_id: str, reason: str) -> None:
@@ -462,8 +503,13 @@ class AppManager:
                 raise RuntimeError(f"cannot suspend {coord.state.value}")
             pol = coord.asr.policy
             swap_codec = pol.swap_codec or None
-            state = None if coord.asr.gang else snapshot_of(
-                coord.app, codec=swap_codec)
+            if coord.asr.gang:
+                state = None
+            else:
+                with tracer().span("ckpt/pin", cat="ckpt",
+                                   trace_id=coord.trace_id,
+                                   args={"suspend": reason}):
+                    state = snapshot_of(coord.app, codec=swap_codec)
             step = self._step_counter.get(coord_id, 0) + 1
             self._step_counter[coord_id] = step
         # The blocking swap-out write runs OUTSIDE coord.lock: holding the

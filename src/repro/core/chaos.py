@@ -186,6 +186,9 @@ class FaultOutcome:
     recoveries: int = 0
     detail: str = ""
     trace_id: str = ""                    # job trace id (deterministic)
+    # which watchdog caught it: "telemetry" (low-performance EWMA),
+    # "monitor" (liveness/straggler path), or "" (not detection-driven)
+    detected_by: str = ""
 
     def trace_key(self) -> Tuple:
         """Wall-time-free identity of this outcome, for replay equality.
@@ -223,7 +226,7 @@ class ScenarioResult:
             "outcomes": [{
                 "fault": o.event.kind.value, "ok": o.ok,
                 "final_state": o.final_state, "detail": o.detail,
-                "trace_id": o.trace_id,
+                "trace_id": o.trace_id, "detected_by": o.detected_by,
                 "detection_s": o.detection_s, "restore_s": o.restore_s,
                 "mttr_s": o.mttr_s} for o in self.outcomes],
         }
@@ -464,9 +467,18 @@ class ChaosController:
         if ev.kind in GANG_KINDS:
             self._settle_gang(ev, coord, h0, rec0, t_inj, detail)
             return
+        detected_by = ""
         if ev.kind == FaultKind.HOST_SLOWDOWN:
             ok_end = self._wait(
                 lambda: coord.state == CoordState.SUSPENDED)
+            # which watchdog pulled the trigger: the suspend reason rides
+            # on the SUSPENDED history entry ("low_performance" = the
+            # telemetry EWMA detector, "straggler" = liveness heartbeat)
+            reason = next((r[2] for r in coord.history[h0:]
+                           if r[1] == "SUSPENDED" and len(r) > 2 and r[2]),
+                          "")
+            detected_by = ("telemetry" if reason == "low_performance"
+                           else ("monitor" if reason else ""))
             if ok_end and self.resume_stragglers:
                 self.service.apps.resume(self.coord_id, block=True)
                 ok_end = coord.state == CoordState.RUNNING
@@ -479,7 +491,7 @@ class ChaosController:
             ev, ok=bool(ok_end), final_state=coord.state.value,
             detection_s=detection, restore_s=restore, mttr_s=mttr,
             recoveries=coord.recoveries, detail=detail,
-            trace_id=coord.trace_id))
+            trace_id=coord.trace_id, detected_by=detected_by))
 
     def _settle_cloud_outage(self, ev: FaultEvent, coord, h0: int,
                              t_inj: float, detail: str) -> None:
@@ -667,6 +679,15 @@ def run_scenario(schedule: FaultSchedule, *, backend_cls=None,
     backend = backend_cls(n_hosts=n_hosts)
     store = FaultyStore(InMemoryStore(latency_s=store_latency_s))
     svc = CACSService({backend.name: backend}, {"default": store})
+    # host_slowdown is detected through TELEMETRY (the throughput-EWMA
+    # watchdog), not liveness: the straggler heartbeat check is disabled
+    # outright and the low-performance detector enabled with chaos-paced
+    # polls (0.01 wall-tuned = 1 paper-second apart) and a short warmup
+    # so a fault landing a few seconds in still sees a clean baseline
+    from repro.core.monitoring import LowPerfConfig
+    svc.apps.monitor.straggler_threshold = float("inf")
+    svc.apps.monitor.poll_interval_s = 0.01
+    svc.apps.monitor.lowperf = LowPerfConfig(warmup_samples=2)
     hook = ChaosHealthHook()
     asr = ASR(name=f"chaos-{schedule.seed}", n_vms=n_vms,
               backend=backend.name,

@@ -85,7 +85,8 @@ class CheckpointManager:
             def _save_and_gc():
                 save_checkpoint(store, coord.ckpt_prefix, step, state,
                                 codec=save_codec, metadata=meta,
-                                plane=self._plane_for(coord))
+                                plane=self._plane_for(coord),
+                                trace_id=getattr(coord, "trace_id", ""))
                 run_gc()
             # Run the blocking save + GC on the coordinator's writer
             # thread (creating it if needed — checking for an existing one
@@ -108,7 +109,8 @@ class CheckpointManager:
                 pol = coord.asr.policy
                 self._async[coord.coord_id] = AsyncCheckpointer(
                     self.store(pol.store), coord.ckpt_prefix, codec=pol.codec,
-                    plane=self._plane_for(coord))
+                    plane=self._plane_for(coord),
+                    trace_id=getattr(coord, "trace_id", ""))
             return self._async[coord.coord_id]
 
     # ---- gang images (core/gang.py barrier protocol) -------------------
@@ -223,7 +225,8 @@ class CheckpointManager:
         tree, _ = restore(self.store(coord.asr.policy.store),
                           coord.ckpt_prefix, step,
                           target=target, shardings=shardings,
-                          plane=self._plane_for(coord))
+                          plane=self._plane_for(coord),
+                          trace_id=getattr(coord, "trace_id", ""))
         return tree
 
     # ---- upload (migration ingest; paper §5.3 "upload a checkpoint") ----

@@ -16,7 +16,47 @@ from repro.ckpt.plane import DataPlaneConfig
 from repro.ckpt.storage import ObjectStore
 from repro.clusters.base import VMHandle, VMTemplate
 from repro.clusters.simulator import fresh_id
+from repro.obs.telemetry import registry
 from repro.sim.simtime import active_clock
+
+
+class _CoordMetrics(dict):
+    """Coordinator metrics dict with registry write-through.
+
+    Drop-in for the plain dict it replaces (same reads, same
+    ``to_dict()`` serialization). Once bound to the job's deterministic
+    trace_id (``CoordinatorDB`` binds at create/load), numeric writes are
+    mirrored as registry gauges ``coord.<trace_id>.<key>`` so per-job
+    RPO/MTTR/queue-wait numbers appear in one telemetry snapshot without
+    any new accessor; non-numeric values stay dict-only.
+    """
+
+    _label = ""
+
+    def bind(self, label: str) -> "_CoordMetrics":
+        self._label = label
+        for k, v in self.items():              # back-fill pre-bind writes
+            self._mirror(k, v)
+        return self
+
+    def _mirror(self, key: str, value: Any) -> None:
+        if (self._label and isinstance(value, (int, float))
+                and not isinstance(value, bool)):
+            registry().set_gauge(f"coord.{self._label}.{key}", float(value))
+
+    def __setitem__(self, key: str, value: Any) -> None:
+        super().__setitem__(key, value)
+        self._mirror(key, value)
+
+    def setdefault(self, key: str, default: Any = None) -> Any:
+        if key not in self:
+            self[key] = default
+            return default
+        return self[key]
+
+    def update(self, *args: Any, **kwargs: Any) -> None:
+        for k, v in dict(*args, **kwargs).items():
+            self[k] = v
 
 
 class CoordState(enum.Enum):
@@ -123,7 +163,8 @@ class Coordinator:
     error: Optional[str] = None
     created_at: float = dataclasses.field(
         default_factory=lambda: active_clock().timestamp())
-    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
+    metrics: Dict[str, float] = dataclasses.field(
+        default_factory=_CoordMetrics)
     recoveries: int = 0
     # Failover targets restore from the *primary's* replicated prefix
     # (core/replication.py): overriding the prefix lets a standby
@@ -235,8 +276,9 @@ class CoordinatorDB:
                 history=[(t, s) for t, s in d.get("history", [])],
                 error=d.get("error"),
                 recoveries=d.get("recoveries", 0),
-                metrics=dict(d.get("metrics", {})),
+                metrics=_CoordMetrics(d.get("metrics", {})),
                 trace_id=d.get("trace_id", ""))
+            coord.metrics.bind(coord.trace_id)
             prefix = d.get("ckpt_prefix")
             if prefix and prefix != f"apps/{coord.coord_id}":
                 coord.ckpt_prefix_override = prefix
@@ -253,6 +295,8 @@ class CoordinatorDB:
             # a replayed seeded scenario produces byte-identical traces
             coord.trace_id = f"tr-{asr.name}-{self._created:04d}"
             self._created += 1
+            if isinstance(coord.metrics, _CoordMetrics):
+                coord.metrics.bind(coord.trace_id)
             self._coords[coord.coord_id] = coord
         self._persist(coord)
         return coord

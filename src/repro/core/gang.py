@@ -47,6 +47,7 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.clusters.simulator import TIME_SCALE, ChannelError, sim_sleep
+from repro.obs.trace import tracer
 from repro.sharding.specs import even_regions
 from repro.sim.simtime import active_clock
 
@@ -309,6 +310,14 @@ class GangCoordinator:
         with self._lock:
             return list(self._trace)
 
+    def _tr(self, step: int, tag: str, detail: str = "") -> None:
+        """Append one wall-free trace tuple and mirror it into the span
+        tracer. The local list stays the replay-exact source of truth
+        (the tracer has a drop cap; barrier_trace() must not)."""
+        self._trace.append((self.trace_id, step, tag, detail))
+        tracer().event(f"gang/{tag}", cat="gang", trace_id=self.trace_id,
+                       args={"step": step, "detail": detail})
+
     def stats(self) -> Dict[str, Any]:
         return {"trace_id": self.trace_id,
                 "epochs_started": self.epochs_started,
@@ -322,21 +331,27 @@ class GangCoordinator:
         GangBarrierError having released every surviving rank; a failed
         epoch leaves the previous committed image untouched (the commit
         marker is the only externally-visible effect)."""
-        with self._lock:
+        with self._lock, tracer().span(
+                "gang/epoch", cat="gang", trace_id=self.trace_id,
+                args={"step": step}):
             self.epochs_started += 1
-            self._trace.append((self.trace_id, step, "begin", ""))
+            self._tr(step, "begin")
             try:
-                self._enter("quiesce", step)
-                self._quiesce(step)
-                self._enter("drain", step)
-                self._drain(step)
-                self._enter("save", step)
-                trees = self._collect()
-                manifest = self.save_fn(step, trees)
-                self._enter("commit", step)
-                self.epochs_committed += 1
-                self._trace.append((self.trace_id, step, "committed",
-                                    f"ranks={len(self.app.ranks)}"))
+                with self._phase_span("quiesce", step):
+                    self._enter("quiesce", step)
+                    self._quiesce(step)
+                with self._phase_span("drain", step):
+                    self._enter("drain", step)
+                    self._drain(step)
+                with self._phase_span("save", step):
+                    self._enter("save", step)
+                    trees = self._collect()
+                    manifest = self.save_fn(step, trees)
+                with self._phase_span("commit", step):
+                    self._enter("commit", step)
+                    self.epochs_committed += 1
+                    self._tr(step, "committed",
+                             f"ranks={len(self.app.ranks)}")
                 return manifest
             except GangBarrierError as e:
                 self._abort(step, e.reason)
@@ -350,8 +365,12 @@ class GangCoordinator:
             finally:
                 self._release()
 
+    def _phase_span(self, phase: str, step: int):
+        return tracer().span(f"gang/{phase}", cat="gang",
+                             trace_id=self.trace_id, args={"step": step})
+
     def _enter(self, phase: str, step: int) -> None:
-        self._trace.append((self.trace_id, step, "phase", phase))
+        self._tr(step, "phase", phase)
         for fn in self._armed.pop(phase, ()):   # one-shot, deterministic
             fn()
 
@@ -374,11 +393,9 @@ class GangCoordinator:
                 # fabric can't reach is not an ack (partition semantics)
                 self._probe(rk)
                 if acked:
-                    self._trace.append((self.trace_id, step, "ack",
-                                        f"r{rk.idx}/{attempt}"))
+                    self._tr(step, "ack", f"r{rk.idx}/{attempt}")
                     break
-                self._trace.append((self.trace_id, step, "retry",
-                                    f"r{rk.idx}/{attempt}"))
+                self._tr(step, "retry", f"r{rk.idx}/{attempt}")
                 sim_sleep(self.cfg.backoff_s * (attempt + 1))
             else:
                 raise GangStragglerError(
@@ -393,8 +410,7 @@ class GangCoordinator:
             rows = sorted(tuple(m) for m in
                           self.transport.channel_recv(rk.host_id))
             rk.pending = list(rows)
-            self._trace.append((self.trace_id, step, "drain",
-                                f"r{rk.idx}={len(rows)}"))
+            self._tr(step, "drain", f"r{rk.idx}={len(rows)}")
         left = self.transport.channel_inflight(
             [rk.host_id for rk in self.app.ranks])
         if left:
@@ -415,7 +431,7 @@ class GangCoordinator:
     def _abort(self, step: int, reason: str) -> None:
         self.aborts += 1
         self.last_abort_reason = reason
-        self._trace.append((self.trace_id, step, "abort", reason))
+        self._tr(step, "abort", reason)
 
     def _release(self) -> None:
         # commit or abort, drained messages were RECEIVED off the fabric:

@@ -27,6 +27,8 @@ import threading
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 from repro.clusters.base import VMHandle
+from repro.obs.telemetry import paper_now, registry
+from repro.obs.trace import tracer
 from repro.sim.simtime import active_clock
 from repro.clusters.simulator import sim_sleep
 
@@ -92,17 +94,43 @@ def heartbeat_roundtrip(vms: Sequence[VMHandle],
                         rtt_s=2 * depth * hop_latency_s)
 
 
+@dataclasses.dataclass
+class LowPerfConfig:
+    """Baseline-relative low-performance detection (paper §1: jobs that
+    "incur exceptionally low performance" are proactively suspended).
+
+    Each watched app publishes a throughput sample per poll (its
+    ``perf_fn`` progress counter differenced over the poll window, in
+    units/paper-second) into the metrics registry, smoothed by an EWMA.
+    The first ``warmup_samples`` samples establish a baseline (the peak
+    observed rate — it also ratchets up later, so jit warmup cannot lock
+    in a slow baseline); once the EWMA stays below
+    ``degradation_factor * baseline`` for ``grace_polls`` consecutive
+    samples the monitor reports ``low_performance`` exactly once per
+    watch. ``min_window_s`` (paper seconds) is the smallest poll window a
+    rate is computed over (shorter windows are folded into the next one).
+    """
+    degradation_factor: float = 0.4
+    grace_polls: int = 3
+    warmup_samples: int = 3
+    ewma_alpha: float = 0.3
+    min_window_s: float = 0.5
+
+
 class MonitoringManager:
     """Watches RUNNING applications; triggers recovery callbacks.
 
     ``recover_cb(coord_id, kind)`` with kind in {"vm_failure",
-    "app_failure", "straggler"} — the Application Manager decides the
-    recovery action (paper §6.3's two cases + proactive suspend).
+    "app_failure", "straggler", "low_performance"} — the Application
+    Manager decides the recovery action (paper §6.3's two cases +
+    proactive suspend).
     """
 
     def __init__(self, recover_cb: Callable[[str, str], None],
                  poll_interval_s: float = 0.05,
-                 native_grace_polls: int = 3):
+                 native_grace_polls: int = 3,
+                 straggler_threshold: float = 3.0,
+                 lowperf: Optional[LowPerfConfig] = None):
         self._recover_cb = recover_cb
         self.poll_interval_s = poll_interval_s
         # Native backends notify VM *crashes*, but a network partition is
@@ -110,6 +138,14 @@ class MonitoringManager:
         # polls the tree declares the VM failed anyway (paper §6.3's
         # cloud-agnostic path backstopping the notification path).
         self.native_grace_polls = native_grace_polls
+        # z-score cutoff for the broadcast tree's host-pace straggler
+        # check; float("inf") disables it (e.g. to exercise the
+        # telemetry-driven detector alone)
+        self.straggler_threshold = straggler_threshold
+        # telemetry-driven throughput watchdog; None = disabled (chaos
+        # scenarios and CACSService(lowperf=...) turn it on)
+        self.lowperf = lowperf
+        self.lowperf_detections = 0
         self._watched: Dict[str, dict] = {}
         self._lock = threading.Lock()
         self._stop = threading.Event()
@@ -127,11 +163,28 @@ class MonitoringManager:
     # ---- registration --------------------------------------------------
     def watch(self, coord_id: str, vms: Sequence[VMHandle],
               health_hook: Optional[Callable[[], bool]],
-              native_notifications: bool) -> None:
+              native_notifications: bool,
+              perf_fn: Optional[Callable[[], float]] = None,
+              trace_id: str = "") -> None:
+        """``perf_fn`` is a monotonic progress counter (steps, tokens,
+        iterations); the monitor differences it per poll into a
+        throughput gauge and feeds the low-performance detector.  A
+        re-watch (resume, restart) resets the perf baseline — the new
+        placement earns its own warmup."""
+        anchor = None
+        if perf_fn is not None:
+            try:
+                anchor = (paper_now(), float(perf_fn()))
+            except Exception:                      # noqa: BLE001
+                anchor = None                      # app not started yet
         with self._lock:
             self._watched[coord_id] = {
                 "vms": list(vms), "hook": health_hook,
                 "native": native_notifications, "unreachable_polls": 0,
+                "perf_fn": perf_fn, "trace_id": trace_id,
+                "perf_anchor": anchor, "perf_ewma": None,
+                "perf_peak": 0.0, "perf_warmup": 0,
+                "perf_baseline": None, "perf_below": 0, "perf_fired": False,
             }
             self._fleet_down.discard(coord_id)
 
@@ -175,6 +228,11 @@ class MonitoringManager:
         report = self.check_once(coord_id)
         if report is None:
             return
+        registry().inc("monitor.polls")
+        tracer().event("monitor/poll", cat="monitor",
+                       trace_id=info.get("trace_id", ""),
+                       args={"coord": coord_id, "ok": report.ok,
+                             "stragglers": len(report.stragglers)})
         if report.unreachable:
             if len(report.unreachable) == len(info["vms"]):
                 # the whole fleet is dark at once — record the outage
@@ -202,6 +260,64 @@ class MonitoringManager:
             self._recover_cb(coord_id, "app_failure")
         elif report.stragglers:
             self._recover_cb(coord_id, "straggler")
+        elif self._check_perf(coord_id, info):
+            self.lowperf_detections += 1
+            registry().inc("monitor.lowperf_detections")
+            tracer().event("monitor/low_performance", cat="monitor",
+                           trace_id=info.get("trace_id", ""),
+                           args={"coord": coord_id,
+                                 "ewma": info.get("perf_ewma"),
+                                 "baseline": info.get("perf_baseline")})
+            self._recover_cb(coord_id, "low_performance")
+
+    def _check_perf(self, coord_id: str, info: dict) -> bool:
+        """One throughput sample for the low-performance detector; True
+        exactly once per watch when degradation is confirmed."""
+        cfg = self.lowperf
+        fn = info.get("perf_fn")
+        if cfg is None or fn is None or info.get("perf_fired"):
+            return False
+        try:
+            count = float(fn())
+        except Exception:                          # noqa: BLE001
+            return False
+        now = paper_now()
+        anchor = info.get("perf_anchor")
+        if anchor is None:
+            info["perf_anchor"] = (now, count)
+            return False
+        t0, c0 = anchor
+        if now - t0 < cfg.min_window_s:
+            return False                           # fold into the next poll
+        rate = max(0.0, count - c0) / (now - t0)
+        info["perf_anchor"] = (now, count)
+        ewma = info.get("perf_ewma")
+        ewma = rate if ewma is None else (
+            cfg.ewma_alpha * rate + (1.0 - cfg.ewma_alpha) * ewma)
+        info["perf_ewma"] = ewma
+        reg = registry()
+        reg.set_gauge(f"app.throughput:{coord_id}", rate)
+        reg.set_gauge(f"app.throughput_ewma:{coord_id}", ewma)
+        baseline = info.get("perf_baseline")
+        if baseline is None:
+            # warmup: the peak observed rate becomes the baseline (a mean
+            # would be polluted by a fault landing mid-warmup)
+            info["perf_peak"] = max(info["perf_peak"], rate)
+            info["perf_warmup"] += 1
+            if info["perf_warmup"] >= cfg.warmup_samples \
+                    and info["perf_peak"] > 0:
+                info["perf_baseline"] = info["perf_peak"]
+            return False
+        if ewma > baseline:                        # jit warmup can raise the
+            info["perf_baseline"] = baseline = ewma    # pace post-warmup
+        if ewma < cfg.degradation_factor * baseline:
+            info["perf_below"] += 1
+        else:
+            info["perf_below"] = 0
+        if info["perf_below"] >= cfg.grace_polls:
+            info["perf_fired"] = True              # once per watch
+            return True
+        return False
 
     def _bump_unreachable(self, coord_id: str) -> int:
         with self._lock:
@@ -230,4 +346,6 @@ class MonitoringManager:
         if info is None:
             return None
         self.heartbeats += 1
-        return heartbeat_roundtrip(info["vms"], info["hook"])
+        return heartbeat_roundtrip(
+            info["vms"], info["hook"],
+            straggler_threshold=self.straggler_threshold)

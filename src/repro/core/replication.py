@@ -50,6 +50,8 @@ from repro.ckpt.layout import COMMITTED, MANIFEST, step_prefix
 from repro.ckpt.plane import ByteBudget, DataPlaneConfig, shared_executor
 from repro.ckpt.reader import list_steps, load_manifest
 from repro.ckpt.storage import ObjectStore
+from repro.obs.telemetry import registry
+from repro.obs.trace import tracer
 from repro.sim.simtime import active_clock
 from repro.core.coordinator import Coordinator, CoordState
 
@@ -153,7 +155,8 @@ class ImageReplicator:
         self._sync_lock = threading.Lock()    # one sync pass at a time
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self._budget = ByteBudget(self.plane.max_inflight_bytes)
+        self._budget = ByteBudget(self.plane.max_inflight_bytes,
+                                  name="replication")
         self.images_replicated = 0
         self.sync_errors = 0
 
@@ -213,11 +216,13 @@ class ImageReplicator:
         while not active_clock().wait(self._stop, self.tick_s):
             try:
                 self.sync()
-            except Exception:                  # noqa: BLE001
+            except Exception as e:             # noqa: BLE001
                 # one bad pass (e.g. a coord terminated mid-walk) must not
                 # kill replication for every app; retried next tick
                 with self._lock:
                     self.sync_errors += 1
+                registry().inc("replication.daemon_errors",
+                               note=f"{type(e).__name__}: {e}")
 
     # ---- replication ---------------------------------------------------
     def sync(self, coord_id: Optional[str] = None) -> None:
@@ -238,10 +243,12 @@ class ImageReplicator:
                 for name in policy.targets:
                     try:
                         self._sync_pair(coord, policy, self.target(name))
-                    except Exception:          # noqa: BLE001
+                    except Exception as e:     # noqa: BLE001
                         with self._lock:
                             self._pairs[(cid, name)]["errors"] += 1
                             self.sync_errors += 1
+                        registry().inc("replication.daemon_errors",
+                                       note=f"{type(e).__name__}: {e}")
 
     def _sync_pair(self, coord: Coordinator, policy: ReplicationPolicy,
                    target: StandbyTarget) -> None:
@@ -267,6 +274,16 @@ class ImageReplicator:
     def _replicate_image(self, coord: Coordinator, target: StandbyTarget,
                          src: ObjectStore, prefix: str, step: int,
                          state: Dict[str, Any]) -> None:
+        with tracer().span("replication/ship", cat="replication",
+                           trace_id=coord.trace_id,
+                           args={"step": step, "target": target.name}) as span:
+            self._replicate_image_inner(coord, target, src, prefix, step,
+                                        state, span)
+
+    def _replicate_image_inner(self, coord: Coordinator,
+                               target: StandbyTarget, src: ObjectStore,
+                               prefix: str, step: int,
+                               state: Dict[str, Any], span) -> None:
         man = load_manifest(src, prefix, step)
         dst = target.store
         throttle = self._throttles.get(coord.coord_id) or _Throttle(None)
@@ -320,6 +337,8 @@ class ImageReplicator:
         state["last_step"] = step
         state["last_image_time"] = man.metadata.get("time")
         state["images_replicated"] += 1
+        span.set("chunks_copied", len(missing))
+        registry().inc("replication.images")
         with self._lock:
             self.images_replicated += 1
             listeners = list(self._replicated_listeners)

@@ -46,6 +46,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import itertools
 import random
 import threading
 import time
@@ -53,7 +54,39 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.ckpt.reader import list_steps, load_manifest
 from repro.core.coordinator import ASR, Coordinator, CoordState
+from repro.obs.trace import tracer
 from repro.sim.simtime import active_clock
+
+# per-instance registry namespace (sched1.*, sched2.* …) — creation order,
+# never hash order, so metric names replay deterministically in-process
+_SCHED_SEQ = itertools.count(1)
+
+
+class _RegCounter:
+    """Scheduler counter stored in the metrics registry.
+
+    Keeps the public attribute contract (``sched.preemptions`` reads as an
+    int, supports ``+=`` and assignment) while the value itself lives in
+    the registry the instance was created under — ``stats()`` is then a
+    thin view over telemetry, not a parallel book. NOTE: disabling that
+    registry freezes these counters (the overhead benchmark only disables
+    a fresh registry around pure ckpt calls, never around a scheduler).
+    """
+
+    def __set_name__(self, owner, name):
+        self._name = name
+
+    def _counter(self, obj):
+        return obj._obs_reg.counter(f"sched.{obj._obs_tag}.{self._name}")
+
+    def __get__(self, obj, objtype=None):
+        if obj is None:
+            return self
+        v = self._counter(obj).value
+        return int(v) if float(v).is_integer() else v
+
+    def __set__(self, obj, value):
+        self._counter(obj).value = value
 
 
 class WallClock:
@@ -118,6 +151,19 @@ class WorkloadTrace:
 
 
 class GlobalScheduler:
+    # decision counters — registry-backed views (see _RegCounter): the
+    # attribute reads/writes below behave like plain ints, but the live
+    # value sits in the metrics registry under sched.<tag>.<name>
+    preemptions = _RegCounter()
+    aborted_preemptions = _RegCounter()
+    resumes = _RegCounter()
+    backfills = _RegCounter()
+    backfill_reuploads = _RegCounter()
+    requeues = _RegCounter()
+    capacity_races = _RegCounter()
+    shrinks = _RegCounter()
+    tick_errors = _RegCounter()
+
     def __init__(self, service, *, clock=None,
                  cloud_stores: Optional[Dict[str, str]] = None,
                  aging_rate: float = 0.0, tick_s: float = 0.25,
@@ -155,6 +201,11 @@ class GlobalScheduler:
         # reflects the claim — counting both would double-book).
         self._rlock = threading.Lock()
         self._reserved: Dict[str, Tuple[str, int]] = {}
+        # registry-backed counters (_RegCounter descriptors): bind this
+        # instance's namespace before the zeroing assignments below
+        from repro.obs.telemetry import registry as _registry
+        self._obs_reg = _registry()
+        self._obs_tag = f"sched{next(_SCHED_SEQ)}"
         self.preemptions = 0
         self.aborted_preemptions = 0
         self.resumes = 0
@@ -283,6 +334,12 @@ class GlobalScheduler:
         run synchronously here (their all-or-nothing rollback needs to
         finish before the beneficiary starts). Returns the number of
         actions dispatched."""
+        with tracer().span("sched/tick", cat="sched") as sp:
+            done = self._tick_inner()
+            sp.set("actions", done)
+        return done
+
+    def _tick_inner(self) -> int:
         done = 0
         with self._tick_mutex:
             while True:
@@ -782,8 +839,16 @@ class GlobalScheduler:
                 detail: str = "") -> None:
         with self._tlock:
             self._seq += 1
-            self._trace.append((self._seq, op, coord.asr.name, backend,
+            seq = self._seq
+            self._trace.append((seq, op, coord.asr.name, backend,
                                 detail, coord.trace_id))
+        # mirror each decision into the span tracer so a job's placement
+        # correlates with its ckpt/monitor spans by trace_id; the local
+        # tuple list above stays the replay-exact source of truth for
+        # decision_trace() (the tracer has a drop cap, this list doesn't)
+        tracer().event(f"sched/{op}", cat="sched", trace_id=coord.trace_id,
+                       args={"seq": seq, "job": coord.asr.name,
+                             "backend": backend, "detail": detail})
 
     def decision_trace(self) -> List[Tuple]:
         """Wall-clock-free decision log: (seq, op, job name, backend,

@@ -48,7 +48,8 @@ class CACSService:
                  db_store: Optional[ObjectStore] = None,
                  start_daemons: bool = True,
                  workers: int = 100,
-                 ckpt_plane: Optional[DataPlaneConfig] = None):
+                 ckpt_plane: Optional[DataPlaneConfig] = None,
+                 lowperf=None):
         stores = stores or {"default": InMemoryStore()}
         self.db = CoordinatorDB(db_store)
         if db_store is not None:
@@ -63,8 +64,10 @@ class CACSService:
         # saves, restores and image ingest all ride it); per-app override
         # via CheckpointPolicy.plane
         self.ckpt = CheckpointManager(stores, plane=ckpt_plane)
+        # lowperf: optional core.monitoring.LowPerfConfig enabling the
+        # telemetry-driven throughput watchdog (None = liveness only)
         self.apps = AppManager(self.db, self.cloud, self.provision,
-                               self.ckpt, workers=workers)
+                               self.ckpt, workers=workers, lowperf=lowperf)
         # optional cross-cloud replication (core/replication.py); attached
         # via attach_replicator so standby wiring stays explicit
         self.replicator = None

@@ -17,6 +17,7 @@ import numpy as np
 from repro.ckpt.snapshot import DeferredSnapshot, SnapshotHandle
 from repro.configs.base import ArchConfig
 from repro.models.model import Model, build_model
+from repro.obs.telemetry import SampleView, registry, unique_name
 from repro.sim.simtime import active_clock
 
 
@@ -78,7 +79,10 @@ class ServeApp:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
-        self.ckpt_stalls: List[float] = []   # seconds decode was blocked
+        # seconds decode was blocked per snapshot pin: registry histogram
+        # is the store; ckpt_stalls (below) is a read-only view
+        self._stall_hist = registry().histogram(
+            unique_name("serve.ckpt_stall_s"))
         self.restarts = 0
 
     def _build(self):
@@ -173,10 +177,16 @@ class ServeApp:
         clock = active_clock()
         t0 = clock.now()
         snap = self._capture()
-        self.ckpt_stalls.append(clock.now() - t0)
+        self._stall_hist.observe(clock.now() - t0)
         return DeferredSnapshot(
             lambda: self._materialize(snap, self.batch),
             step=snap["generated"] if step is None else step)
+
+    @property
+    def ckpt_stalls(self) -> SampleView:
+        """Per-snapshot pin stalls, as a list-like view over the registry
+        histogram (len()/indexing kept for existing callers)."""
+        return SampleView(self._stall_hist)
 
     def healthy(self) -> bool:
         return True

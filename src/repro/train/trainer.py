@@ -23,6 +23,7 @@ from repro.ckpt.plane import PreEncodedChunk
 from repro.ckpt.snapshot import DeferredSnapshot, SnapshotHandle
 from repro.configs.base import ArchConfig
 from repro.data.pipeline import TokenPipeline
+from repro.obs.telemetry import SampleView, registry, unique_name
 from repro.kernels.qsnap import qsnap_encode_chunks
 from repro.models.model import Model, build_model
 from repro.sharding.specs import MeshAxes, activation_sharding
@@ -134,7 +135,10 @@ class TrainerApp:
         self.last_loss: float = float("nan")
         self.losses: list = []
         self.step_times: list = []
-        self.ckpt_stalls: list = []          # seconds the loop was blocked
+        # seconds the loop was blocked per snapshot pin: the registry
+        # histogram is the store; ckpt_stalls (below) is a read-only view
+        self._stall_hist = registry().histogram(
+            unique_name("trainer.ckpt_stall_s"))
         self._host_step = 0                  # mirrors state["step"] host-side
         self.restarts = 0
         self._started = False
@@ -173,6 +177,12 @@ class TrainerApp:
             self.step_times.append(clock.now() - t0)
 
     @property
+    def ckpt_stalls(self) -> "SampleView":
+        """Per-snapshot pin stalls, as a list-like view over the registry
+        histogram (len()/indexing kept for existing tests and examples)."""
+        return SampleView(self._stall_hist)
+
+    @property
     def current_step(self) -> int:
         # host-side mirror: reading it never forces a device sync (the
         # old int(state["step"]) stalled callers on the in-flight step)
@@ -202,7 +212,7 @@ class TrainerApp:
             state = self._state
             data = dict(self.pipeline.state_dict())
             data["step"] = host_step = self._host_step
-        self.ckpt_stalls.append(clock.now() - t0)
+        self._stall_hist.observe(clock.now() - t0)
         device_encode = codec in ("int8", "int8+zlib")
 
         def materialize():

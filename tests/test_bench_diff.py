@@ -1,0 +1,110 @@
+"""Regression tests for scripts/bench_diff.py (ISSUE 9 satellite).
+
+The baseline differ is itself a CI gate, so its failure modes — vanished
+rows, drifted invariant metrics, insane values — need coverage against a
+fixture baseline, not just the live benchmarks.
+"""
+import importlib.util
+import json
+import os
+
+import pytest
+
+_SCRIPT = os.path.join(os.path.dirname(__file__), os.pardir, "scripts",
+                       "bench_diff.py")
+_spec = importlib.util.spec_from_file_location("bench_diff", _SCRIPT)
+bench_diff = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(bench_diff)
+
+
+def _write(dirpath, name, rows):
+    os.makedirs(dirpath, exist_ok=True)
+    path = os.path.join(dirpath, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump({"bench": name, "rows": [
+            {"param": p, "metric": m, "value": v} for p, m, v in rows
+        ]}, f)
+    return path
+
+
+BASE_ROWS = [
+    ("host_slowdown", "detection_s", 20.0),
+    ("host_slowdown", "telemetry_detected", 1.0),   # exact metric
+    ("default", "overhead_frac", 0.01),
+    ("default", "overhead_ok", 1.0),                # exact metric
+]
+
+
+@pytest.fixture
+def dirs(tmp_path):
+    base = tmp_path / "baselines"
+    fresh = tmp_path / "fresh"
+    _write(str(base), "fx", BASE_ROWS)
+    return str(base), str(fresh)
+
+
+def test_identical_rows_pass(dirs, capsys):
+    base, fresh = dirs
+    _write(fresh, "fx", BASE_ROWS)
+    assert bench_diff.diff_one("fx", base, fresh) == 0
+    assert "ok   fx: 4 rows match (2 exact)" in capsys.readouterr().out
+
+
+def test_inexact_metric_may_drift(dirs):
+    base, fresh = dirs
+    rows = [(p, m, 37.5 if m == "detection_s" else v)
+            for p, m, v in BASE_ROWS]
+    _write(fresh, "fx", rows)                       # timing drift is fine
+    assert bench_diff.diff_one("fx", base, fresh) == 0
+
+
+def test_missing_row_fails(dirs, capsys):
+    base, fresh = dirs
+    _write(fresh, "fx", BASE_ROWS[:-1])             # one row vanished
+    assert bench_diff.diff_one("fx", base, fresh) == 1
+    assert "row disappeared: default,overhead_ok" in capsys.readouterr().out
+
+
+def test_extra_row_fails(dirs, capsys):
+    base, fresh = dirs
+    _write(fresh, "fx", BASE_ROWS + [("new", "surprise", 1.0)])
+    assert bench_diff.diff_one("fx", base, fresh) == 1
+    assert "unexpected new row" in capsys.readouterr().out
+
+
+def test_regressed_exact_metric_fails(dirs, capsys):
+    base, fresh = dirs
+    rows = [(p, m, 0.0 if m == "telemetry_detected" else v)
+            for p, m, v in BASE_ROWS]
+    _write(fresh, "fx", rows)
+    assert bench_diff.diff_one("fx", base, fresh) == 1
+    assert "invariant metric drifted" in capsys.readouterr().out
+
+
+def test_insane_inexact_value_fails(dirs, capsys):
+    base, fresh = dirs
+    rows = [(p, m, -0.5 if m == "overhead_frac" else v)
+            for p, m, v in BASE_ROWS]
+    _write(fresh, "fx", rows)                       # negative timing metric
+    assert bench_diff.diff_one("fx", base, fresh) == 1
+    assert "not a sane value" in capsys.readouterr().out
+
+
+def test_missing_fresh_file_fails(dirs, capsys):
+    base, fresh = dirs
+    os.makedirs(fresh, exist_ok=True)
+    assert bench_diff.diff_one("fx", base, fresh) == 1
+    assert "fresh run produced no BENCH_fx.json" in capsys.readouterr().out
+
+
+def test_committed_baselines_declare_their_exact_metrics():
+    # every committed baseline should gate at least one invariant — the
+    # differ otherwise degrades to a row-coverage check only
+    bdir = os.path.join(os.path.dirname(_SCRIPT), os.pardir, "benchmarks",
+                        "baselines")
+    names = [f for f in os.listdir(bdir)
+             if f.startswith("BENCH_") and f.endswith(".json")]
+    assert names
+    for fname in names:
+        rows = bench_diff._load(os.path.join(bdir, fname))
+        assert any(m in bench_diff.EXACT_METRICS for _, m in rows), fname
