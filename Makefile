@@ -8,6 +8,7 @@
 #   make gang-smoke      gang barrier overhead + outage shrink-restore MTTR
 #   make train-smoke     real-pytree device data path: stall/bytes/bit-exact
 #   make obs-smoke       telemetry loop: save spans + EWMA slowdown detection
+#   make serve-smoke     serving fleet: adopted cold starts + pooled-vs-static
 #   make bench-diff      fresh gated benches vs committed baselines
 #   make docs-lint       sanity-check docs: files exist, internal refs resolve
 
@@ -15,7 +16,7 @@ PY      ?= python
 PYPATH  := src
 
 .PHONY: test bench-smoke chaos-smoke failover-smoke sched-smoke gang-smoke \
-	train-smoke obs-smoke bench-diff docs-lint
+	train-smoke obs-smoke serve-smoke bench-diff docs-lint
 
 test:
 	PYTHONPATH=$(PYPATH) $(PY) -m pytest -x -q
@@ -52,10 +53,17 @@ obs-smoke:
 		obs-artifacts/obs_smoke.trace.jsonl
 	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only obs
 
+# checkpoint-backed serving fleet: million-request storm vs static fleet +
+# real-stack adoption cold starts and suspend-mid-decode bit-exactness
+serve-smoke:
+	PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run --only serve_fleet
+	PYTHONPATH=$(PYPATH) $(PY) -m pytest -q \
+		tests/test_serve.py tests/test_serve_fleet.py
+
 # bench_diff diffs EVERY committed baseline, so regenerate them all here
 bench-diff:
 	CHAOS_TRIALS=2 FAILOVER_TRIALS=1 PYTHONPATH=$(PYPATH) $(PY) -m benchmarks.run \
-		--only fault_recovery,oversubscription,gang,replication,train_ckpt,obs \
+		--only fault_recovery,oversubscription,gang,replication,train_ckpt,obs,serve_fleet \
 		--json-dir bench-results
 	$(PY) scripts/bench_diff.py --fresh bench-results
 

@@ -21,7 +21,7 @@ import traceback
 
 ALL = ("fig3", "table2", "table2incr", "fig4", "fig5", "fig6",
        "ckpt_path", "pplane", "fault_recovery", "replication",
-       "oversubscription", "gang", "train_ckpt", "obs")
+       "oversubscription", "gang", "train_ckpt", "obs", "serve_fleet")
 
 
 def main() -> None:
@@ -36,8 +36,9 @@ def main() -> None:
     from benchmarks import (ckpt_path, fault_recovery, fig3_scalability,
                             fig4_service_load, fig5_migration, fig6_backends,
                             gang, obs_overhead, oversubscription,
-                            parallel_plane, replication, table2_image_size,
-                            table2_incremental, train_ckpt)
+                            parallel_plane, replication, serve_fleet,
+                            table2_image_size, table2_incremental,
+                            train_ckpt)
     from benchmarks.common import CSV_ROWS
 
     modules = {
@@ -55,6 +56,7 @@ def main() -> None:
         "gang": gang,
         "train_ckpt": train_ckpt,
         "obs": obs_overhead,
+        "serve_fleet": serve_fleet,
     }
     print("bench,param,metric,value")
     failures = 0

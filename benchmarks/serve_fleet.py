@@ -1,0 +1,180 @@
+"""Checkpoint-backed serving fleet vs a static fleet (ROADMAP tentpole).
+
+Two parts, one claim: suspend/restore autoscaling — scale OUT by
+restoring replicas from a shared CAS seed image (prefix adoption, zero
+re-uploads), scale IN by suspending idle replicas so batch work reclaims
+their hosts — beats a static fleet on BOTH tail latency and efficiency.
+
+Part A (scale): a simulated day of a diurnal + bursty request storm
+(millions of requests) through the discrete-event ``ServeFleetEngine``
+on an over-subscribed cloud shared with batch jobs. Pooled (autoscaled)
+and static fleets consume the *identical* seeded trace; we compare
+p99 latency and served-QPS-per-replica-host-second.
+``pooled_beats_static`` is exact-gated in CI: 1.0 means the pooled fleet
+won both metrics.
+
+Part B (real stack): a real ServeApp fleet on the CACS service — seed
+publish, two adopted cold starts (``coldstart_reuploads`` must be
+exactly 0), then a suspend taken mid-decode (pinned through the
+donated-cache window), an unpark resume, and a bit-exactness check of
+the generated token stream against an unsuspended reference
+(``tokens_bitexact`` must be exactly 1).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, wait_until
+
+BENCH = "serve_fleet"
+
+HORIZON_S = 86400.0          # one simulated day
+N_HOSTS = 24
+N_BATCH = 200
+
+
+def _trace(seed=21):
+    from repro.serve.workload import RequestTrace
+    return RequestTrace(seed=seed, horizon_s=HORIZON_S, base_qps=4.0,
+                        peak_qps=35.0, period_s=43200.0,
+                        burst_every_s=600.0, burst_s=120.0, burst_mult=3.0)
+
+
+def _storm(policy, seed=21):
+    from repro.sim.serve import ServeFleetEngine
+    eng = ServeFleetEngine(N_HOSTS, seed, trace=_trace(seed), policy=policy,
+                           service_s=0.1, concurrency=2,
+                           replica_boot_s=5.0, suspend_s=2.0)
+    eng.start_fleet(policy.min_replicas)
+    eng.load(n_jobs=N_BATCH, horizon_s=HORIZON_S, max_vms=4,
+             mean_work_s=3600.0, max_priority=8)
+    eng.run()
+    return eng.fleet_stats()
+
+
+def bench_request_storm() -> float:
+    """Part A: pooled vs static under the identical million-request day."""
+    from repro.serve.workload import FleetPolicy
+    pooled_pol = FleetPolicy(min_replicas=1, max_replicas=8,
+                             target_util=0.7, scale_in_idle_s=30.0,
+                             eval_period_s=5.0)
+    static_pol = FleetPolicy(min_replicas=4, max_replicas=4,
+                             target_util=0.7, scale_in_idle_s=1e18,
+                             eval_period_s=5.0)
+    results = {}
+    for name, pol in (("static", static_pol), ("pooled", pooled_pol)):
+        t0 = time.monotonic()
+        s = _storm(pol)
+        results[name] = s
+        emit(BENCH, name, "p50_s", s["p50_s"])
+        emit(BENCH, name, "p99_s", s["p99_s"])
+        emit(BENCH, name, "qps_per_host", s["served_qps_per_host"])
+        emit(BENCH, name, "host_s", s["replica_host_s"])
+        emit(BENCH, name, "coldstarts", s["coldstarts"])
+        emit(BENCH, name, "parks", s["parks"])
+        emit(BENCH, name, "batch_done", s["batch_completed"])
+        emit(BENCH, name, "wall_s", time.monotonic() - t0)
+    emit(BENCH, "storm", "requests", results["pooled"]["requests"])
+    won = (results["pooled"]["p99_s"] < results["static"]["p99_s"]
+           and results["pooled"]["served_qps_per_host"]
+           > results["static"]["served_qps_per_host"])
+    return 1.0 if won else 0.0
+
+
+def bench_real_fleet():
+    """Part B: adoption cold starts + suspend-mid-decode bit-exactness on
+    the real service. Returns (coldstart_reuploads, tokens_bitexact)."""
+    import dataclasses
+
+    from repro.ckpt import InMemoryStore
+    from repro.clusters import SnoozeBackend
+    from repro.configs import get_config, reduced
+    from repro.core import CACSService, CoordState, GlobalScheduler
+    from repro.serve import FleetController, FleetPolicy
+    from repro.serve.engine import ServeApp
+
+    cfg = dataclasses.replace(reduced(get_config("repro-100m")),
+                              dtype="float32")
+    n_tokens = 16
+    store = InMemoryStore()
+    svc = CACSService({"snooze": SnoozeBackend(n_hosts=4)},
+                      {"default": store})
+    sched = GlobalScheduler(svc)             # synchronous ticks
+    svc.attach_scheduler(sched)
+    fleet = FleetController(
+        svc, sched, name="bench",
+        replica_factory=lambda: ServeApp(cfg, batch=1, prompt_len=8,
+                                         n_tokens=n_tokens, cache_len=48,
+                                         token_delay_s=0.02),
+        policy=FleetPolicy(min_replicas=1, max_replicas=4,
+                           scale_in_idle_s=0.0),
+        backend="snooze", priority=5)
+    try:
+        # unsuspended reference stream (same seed, same config)
+        ref = ServeApp(cfg, batch=1, prompt_len=8, n_tokens=n_tokens,
+                       cache_len=48)
+        ref.start(None, None)
+        wait_until(ref.is_done, 60)
+        ref.stop()
+        ref_tokens = ref.checkpoint_state()["tokens_out"]
+
+        # publish the shared seed image (one upload for the whole fleet)
+        seed_app = ServeApp(cfg, batch=1, prompt_len=8, n_tokens=6,
+                            cache_len=48)
+        seed_app.start(None, None)
+        wait_until(seed_app.is_done, 60)
+        seed_app.stop()
+        seed_state = seed_app.checkpoint_state()
+        t0 = time.monotonic()
+        fleet.publish_seed(seed_state, step=seed_state["generated"])
+        emit(BENCH, "seed", "publish_s", time.monotonic() - t0)
+
+        # two adopted cold starts: zero objects written
+        puts_before = store.put_count
+        cids = fleet.scale_out(2)
+        fleet.wait_live(cids, timeout=60)
+        reuploads = fleet.coldstart_reuploads + (store.put_count
+                                                 - puts_before)
+        colds = [svc.db.get(c).metrics["coldstart_s"] for c in cids]
+        emit(BENCH, "coldstart", "mean_s", float(np.mean(colds)))
+        emit(BENCH, "coldstart", "max_s", float(np.max(colds)))
+
+        # park one replica mid-decode (the suspend pins through the
+        # donated-cache window), then unpark and run it to completion
+        target = cids[0]
+        coord = svc.db.get(target)
+        wait_until(lambda: coord.app.generated >= 9 or coord.app.is_done(),
+                   60)
+        parked = fleet.scale_in(1, force=True)
+        bitexact = 1.0
+        if parked:
+            fleet.scale_out(1)
+            fleet.wait_live(parked, timeout=60)
+        for cid in cids:
+            app = svc.db.get(cid).app
+            wait_until(app.is_done, 60)
+            out = app.checkpoint_state()["tokens_out"]
+            if not np.array_equal(out, ref_tokens):
+                bitexact = 0.0
+        emit(BENCH, "fleet", "parks", float(fleet.parks))
+        emit(BENCH, "fleet", "unparks", float(fleet.unparks))
+        return float(reuploads), bitexact
+    finally:
+        sched.stop()
+        svc.shutdown()
+
+
+def run() -> None:
+    pooled_beats_static = bench_request_storm()
+    coldstart_reuploads, tokens_bitexact = bench_real_fleet()
+    # exact-gated in scripts/bench_diff.py
+    emit(BENCH, "fleet", "pooled_beats_static", pooled_beats_static)
+    emit(BENCH, "fleet", "coldstart_reuploads", coldstart_reuploads)
+    emit(BENCH, "fleet", "tokens_bitexact", tokens_bitexact)
+
+
+if __name__ == "__main__":
+    print("bench,param,metric,value")
+    run()

@@ -42,6 +42,9 @@ EXACT_METRICS = {
     "floor5x_ok",                 # staged-capture stall cut vs sync save
     "telemetry_detected",         # slowdowns caught by the EWMA watchdog
     "overhead_ok",                # telemetry cost on the ckpt path < 5%
+    "pooled_beats_static",        # fleet wins p99 AND qps/host vs static
+    "coldstart_reuploads",        # adoption cold starts write 0 objects
+    "tokens_bitexact",            # suspend-mid-decode stream is identical
 }
 
 

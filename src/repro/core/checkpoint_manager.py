@@ -192,7 +192,7 @@ class CheckpointManager:
     # ---- query / restore -------------------------------------------------
     def list_images(self, coord: Coordinator) -> List[int]:
         return list_steps(self.store(coord.asr.policy.store),
-                          coord.ckpt_prefix)
+                          self.read_prefix(coord))
 
     def image_info(self, coord: Coordinator, step: int) -> Dict[str, Any]:
         man = load_manifest(self.store(coord.asr.policy.store),
@@ -216,14 +216,34 @@ class CheckpointManager:
             out.update({f"writer_{k}": v for k, v in ck.stats().items()})
         return out
 
+    def read_prefix(self, coord: Coordinator,
+                    store: Optional[ObjectStore] = None) -> str:
+        """The prefix restores should read: the coordinator's own prefix
+        once it holds a committed image, else its ``ckpt_adopt_prefix``
+        (serving-fleet scale-out: a fresh replica cold-starts from the
+        shared seed lineage — pure CAS reads, zero chunk copies — while
+        its own saves open a private lineage under ``ckpt_prefix``).
+        Writes, GC and delete paths NEVER use this: they stay on the own
+        prefix, so terminating a replica can't reap the seed image.
+        getattr: tests drive this manager with duck-typed coordinator
+        stand-ins that predate the adoption field."""
+        adopt = getattr(coord, "ckpt_adopt_prefix", "")
+        if not adopt:
+            return coord.ckpt_prefix
+        store = store if store is not None \
+            else self.store(coord.asr.policy.store)
+        if latest_step(store, coord.ckpt_prefix) is not None:
+            return coord.ckpt_prefix
+        return adopt
+
     def latest(self, coord: Coordinator) -> Optional[int]:
         return latest_step(self.store(coord.asr.policy.store),
-                           coord.ckpt_prefix)
+                           self.read_prefix(coord))
 
     def load(self, coord: Coordinator, step: Optional[int] = None, *,
              shardings: Any = None, target: Any = None) -> Any:
         tree, _ = restore(self.store(coord.asr.policy.store),
-                          coord.ckpt_prefix, step,
+                          self.read_prefix(coord), step,
                           target=target, shardings=shardings,
                           plane=self._plane_for(coord),
                           trace_id=getattr(coord, "trace_id", ""))

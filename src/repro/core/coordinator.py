@@ -171,6 +171,14 @@ class Coordinator:
     # coordinator adopt an already-replicated image lineage with zero
     # chunk copies, and continue appending to it after failover.
     ckpt_prefix_override: Optional[str] = None
+    # Seed-lineage adoption for serving-fleet scale-out (serve/fleet.py):
+    # unlike ckpt_prefix_override (which rehomes the job's whole lineage),
+    # an adopt prefix only redirects *reads while this job's own prefix
+    # holds no committed image* — the replica cold-starts from the shared
+    # seed image with zero chunk copies, then its own suspend/periodic
+    # saves start a private lineage under ckpt_prefix (many replicas can
+    # adopt one seed without their saves colliding).
+    ckpt_adopt_prefix: Optional[str] = None
     # Per-job trace id threaded through every control-plane record touching
     # this job (scheduler decision_trace rows, chaos outcomes, replication
     # stats) so one gang lifecycle is debuggable from a single grep. It is
@@ -202,6 +210,7 @@ class Coordinator:
             "recoveries": self.recoveries,
             "history": [(t, s) for t, s, *_ in self.history],
             "ckpt_prefix": self.ckpt_prefix,
+            "ckpt_adopt_prefix": self.ckpt_adopt_prefix,
             "policy": {
                 "period_s": self.asr.policy.period_s,
                 "codec": self.asr.policy.codec,
@@ -282,6 +291,7 @@ class CoordinatorDB:
             prefix = d.get("ckpt_prefix")
             if prefix and prefix != f"apps/{coord.coord_id}":
                 coord.ckpt_prefix_override = prefix
+            coord.ckpt_adopt_prefix = d.get("ckpt_adopt_prefix")
             with self._lock:
                 self._coords[coord.coord_id] = coord
             loaded.append(coord)

@@ -307,20 +307,36 @@ class GlobalScheduler:
     # ------------------------------------------------------------------
     # submission
     # ------------------------------------------------------------------
-    def submit(self, asr: ASR) -> str:
+    def submit(self, asr: ASR, *,
+               adopt_prefix: Optional[str] = None) -> str:
         """Admit a job: a persisted QUEUED coordinator record is created
         immediately (it survives restarts) and a scheduling pass decides
         when and *where* it actually starts. Returns the coord_id; poll
-        its state (QUEUED until placed)."""
+        its state (QUEUED until placed).
+
+        ``adopt_prefix`` sets the job's checkpoint *read* adoption before
+        the first scheduling pass can race it: a serving-fleet replica
+        submitted against a seed lineage restores that shared image on
+        cold start (zero re-uploads) while its own saves stay private —
+        see ``Coordinator.ckpt_adopt_prefix``."""
         coord = self.service.apps.enqueue(asr)
+        if adopt_prefix:
+            coord.ckpt_adopt_prefix = adopt_prefix
         coord.metrics["queued_at_v"] = self.clock.now()
         self.service.db.persist(coord)
         self._record("submit", coord, asr.backend)
-        if self._thread is None:
-            self.tick()                    # synchronous mode (tests/tools)
-        else:
-            self.kick("submit")
+        self.nudge("submit")
         return coord.coord_id
+
+    def nudge(self, reason: str = "") -> None:
+        """Request a pass the way submit() does: synchronous tick when no
+        loop thread is running (tests/tools), event kick otherwise. For
+        external queue mutations — e.g. a FleetController unparking a
+        suspended replica."""
+        if self._thread is None:
+            self.tick()
+        else:
+            self.kick(reason)
 
     # ------------------------------------------------------------------
     # scheduling pass
@@ -389,9 +405,15 @@ class GlobalScheduler:
                 return {"op": "requeue", "coord": c}, []
         with self._rlock:
             inflight = set(self._reserved)
+        # fleet-parked replicas (scale-in suspends, serve/fleet.py) are
+        # deliberately swapped out to hand their hosts to batch work —
+        # auto-resuming them here would undo the reclaim; only their
+        # FleetController unparks them (clearing the flag) on scale-out
         waiting = [c for c in coords
                    if c.state in (CoordState.QUEUED, CoordState.SUSPENDED)
-                   and c.coord_id not in inflight]
+                   and c.coord_id not in inflight
+                   and not (c.state == CoordState.SUSPENDED
+                            and c.metrics.get("fleet_parked"))]
         waiting.sort(key=lambda c: (-self.effective_priority(c),
                                     c.metrics.get("queued_at_v", 0.0),
                                     c.asr.name, c.coord_id))
@@ -427,13 +449,24 @@ class GlobalScheduler:
         except Exception:                  # noqa: BLE001
             return None                    # home store unreachable
 
+    def _read_prefix(self, coord: Coordinator, store) -> str:
+        """The prefix a restore on ``store`` would read: the job's own
+        prefix when it holds images there, else its adopt prefix (fleet
+        replicas restoring a replicated seed lineage on another cloud
+        pass the zero-re-upload gate through the seed's replicas)."""
+        adopt = coord.ckpt_adopt_prefix
+        if adopt and not list_steps(store, coord.ckpt_prefix):
+            return adopt
+        return coord.ckpt_prefix
+
     def _warm_step(self, coord: Coordinator, backend: str) -> Optional[int]:
         """Newest step COMMITTED in ``backend``'s store under this job's
-        prefix — what a resume there could restore without any upload."""
+        read prefix — what a resume there could restore without any
+        upload."""
         try:
             store = self.service.ckpt.store(
                 self.cloud_stores.get(backend, "default"))
-            steps = list_steps(store, coord.ckpt_prefix)
+            steps = list_steps(store, self._read_prefix(coord, store))
         except Exception:                  # noqa: BLE001
             return None
         return steps[-1] if steps else None
@@ -823,10 +856,11 @@ class GlobalScheduler:
         try:
             store = self.service.ckpt.store(
                 self.cloud_stores.get(backend, "default"))
-            steps = list_steps(store, coord.ckpt_prefix)
+            prefix = self._read_prefix(coord, store)
+            steps = list_steps(store, prefix)
             if not steps:
                 return 0
-            man = load_manifest(store, coord.ckpt_prefix, steps[-1])
+            man = load_manifest(store, prefix, steps[-1])
         except Exception:                  # noqa: BLE001
             return 0
         keys = {c.key for li in man.leaves.values() for c in li.chunks}

@@ -1,3 +1,6 @@
 from repro.serve.engine import Engine, ServeApp
+from repro.serve.fleet import FleetController
+from repro.serve.workload import FleetPolicy, RequestTrace, Router
 
-__all__ = ["Engine", "ServeApp"]
+__all__ = ["Engine", "ServeApp", "FleetController", "FleetPolicy",
+           "RequestTrace", "Router"]

@@ -79,6 +79,11 @@ class ServeApp:
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
+        # signaled whenever the donated-cache slot refills (or the decode
+        # loop dies): _capture blocks on this instead of polling the clock
+        self._cond = threading.Condition(self._lock)
+        # first decode-loop exception; healthy() flips False on it
+        self._failure: Optional[BaseException] = None
         # seconds decode was blocked per snapshot pin: registry histogram
         # is the store; ckpt_stalls (below) is a read-only view
         self._stall_hist = registry().histogram(
@@ -105,6 +110,7 @@ class ServeApp:
                                  cache_len=self.cache_len)
             self.restarts += 1
         self._stop.clear()
+        self._failure = None
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
 
@@ -116,11 +122,12 @@ class ServeApp:
             ).astype(np.int32)
             logits, cache = self.engine.prefill({"tokens": jnp.asarray(prompt)})
             token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            with self._lock:
+            with self._cond:
                 self.cache = cache
                 self._last_token = token
                 self.tokens_out.append(np.asarray(token))
                 self.generated = 1
+                self._cond.notify_all()
         clock = active_clock()
         while not self._stop.is_set() and self.generated < self.n_tokens:
             if self.token_delay_s:
@@ -130,30 +137,62 @@ class ServeApp:
             with self._lock:
                 cache, token = self.cache, self._last_token
                 self.cache = None
-            logits, new_cache = self.engine.decode(cache, token, pos)
+            try:
+                logits, new_cache = self.engine.decode(cache, token, pos)
+            except BaseException as e:             # noqa: BLE001
+                # Restore the surrendered slot: leaving it None would make
+                # every _capture (snapshot_async, suspend) block forever on
+                # a dead loop. The pre-decode cache is the last consistent
+                # state (best-effort — if the jitted call got far enough to
+                # consume the donated buffer, a later restore re-reads the
+                # newest committed image instead), so a suspend issued
+                # after the fault still swaps out cleanly.
+                with self._cond:
+                    self.cache = cache
+                    self._failure = e
+                    self._cond.notify_all()
+                registry().inc("serve.decode_failures",
+                               note=f"{type(e).__name__}: {e}")
+                return
             token = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            with self._lock:
+            with self._cond:
                 self.cache = jax.block_until_ready(new_cache)
                 self._last_token = token
                 self.tokens_out.append(np.asarray(token))
                 self.generated += 1
+                self._cond.notify_all()
 
     def _capture(self) -> Dict[str, Any]:
         """Pin a consistent snapshot under the lock (waits out the window
         where the donated cache is surrendered to an in-flight decode).
-        Returns references only — materialization is the caller's."""
-        clock = active_clock()
-        while True:
-            with self._lock:
-                if self.cache is not None:
-                    return {
-                        "params": self.params,
-                        "cache": self.cache,
-                        "generated": self.generated,
-                        "last_token": self._last_token,
-                        "tokens_out": list(self.tokens_out),
-                    }
-            clock.sleep(0.001)
+        Params/tokens are references (never donated, immutable); the KV
+        cache is **copied on device** — the very next decode step donates
+        the live buffer, so a pinned reference would read as "Array has
+        been deleted" by the time the writer thread encodes it. The copy
+        is dispatch-only (async), so the pin stall stays in microseconds.
+
+        Blocks on a condition variable signaled when the slot refills —
+        never on the installed clock: a virtual-time poll here would race
+        the SimClock forward while the decode runs in wall time (the same
+        retime hazard the gang barrier's paused-rank poll had). The wait
+        timeout is only a wall-clock backstop against a decode thread that
+        dies without notifying."""
+        with self._cond:
+            while self.cache is None:
+                if self._failure is not None:
+                    raise RuntimeError(
+                        "serve decode loop failed with the donated cache "
+                        "unrecoverable") from self._failure
+                self._cond.wait(timeout=0.1)
+            return {
+                "params": self.params,
+                "cache": jax.tree_util.tree_map(
+                    lambda x: jnp.array(x, copy=True)
+                    if isinstance(x, jax.Array) else x, self.cache),
+                "generated": self.generated,
+                "last_token": self._last_token,
+                "tokens_out": list(self.tokens_out),
+            }
 
     @staticmethod
     def _materialize(snap: Dict[str, Any], batch: int) -> Dict[str, Any]:
@@ -189,12 +228,28 @@ class ServeApp:
         return SampleView(self._stall_hist)
 
     def healthy(self) -> bool:
-        return True
+        return self._failure is None
 
-    def stop(self) -> None:
+    def stop(self, join_s: float = 60.0) -> bool:
+        """Stop the decode loop. Returns True when the thread LEAKED —
+        the join timed out on a wedged decode (e.g. a hung device call).
+        Leaks are counted in the ``serve.stop_timeouts`` registry counter
+        with the last decode error as the note, so a fleet teardown that
+        silently strands threads is visible in one telemetry snapshot."""
         self._stop.set()
-        if self._thread is not None:
-            self._thread.join(timeout=60)
+        with self._cond:
+            self._cond.notify_all()
+        thread = self._thread
+        if thread is None:
+            return False
+        thread.join(timeout=join_s)
+        if thread.is_alive():
+            registry().inc(
+                "serve.stop_timeouts",
+                note=f"decode thread wedged after {join_s}s "
+                     f"(last_error={self._failure!r})")
+            return True
+        return False
 
     def is_done(self) -> bool:
         return self.generated >= self.n_tokens

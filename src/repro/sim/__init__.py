@@ -8,6 +8,11 @@
 * ``SimEngine`` — pure single-threaded discrete-event cluster simulation
   for large-scale deterministic scenarios (thousands of hosts, simulated
   weeks, byte-identical traces).
+* ``sim/serve.py`` — ``ServeFleetEngine``, a SimEngine subclass that adds
+  an autoscaled serving tier (replica boots/parks as events, millions of
+  requests handled arithmetically between events).  Imported directly as
+  ``repro.sim.serve`` — not re-exported here, to keep this package free
+  of a dependency on ``repro.serve``.
 """
 from repro.sim.engine import InvariantViolation, SimEngine, SimJob
 from repro.sim.simtime import (TIME_SCALE, Clock, Event, EventQueue,

@@ -126,11 +126,17 @@ class SimEngine:
              arrival_horizon_s: Optional[float] = None,
              max_vms: int = _MAX_VMS, mean_work_s: float = 3600.0,
              ckpt_period_s: float = 900.0,
-             boot_s: float = 30.0, restore_s: float = 60.0) -> None:
+             boot_s: float = 30.0, restore_s: float = 60.0,
+             max_priority: int = _MAX_PRI) -> None:
         """Seeded open arrivals (uniform order statistics — deterministic
         for the seed).  ``arrival_horizon_s`` (default: ``horizon_s``)
         bounds *arrivals*; host faults span the full ``horizon_s`` — pack
-        arrivals into a shorter window to create over-subscription."""
+        arrivals into a shorter window to create over-subscription.
+        ``max_priority`` caps the drawn priorities — a workload sharing
+        the cluster with always-on serving replicas (sim/serve.py pins
+        those at ``_MAX_PRI``) draws batch jobs strictly below them."""
+        if not 1 <= max_priority <= _MAX_PRI:
+            raise ValueError(f"max_priority must be in [1, {_MAX_PRI}]")
         span = arrival_horizon_s or horizon_s
         arrivals = sorted(self.rng.uniform(0.0, span) for _ in range(n_jobs))
         base = len(self.jobs)
@@ -138,7 +144,7 @@ class SimEngine:
             job = SimJob(
                 jid=base + i, arrival_s=at,
                 n_vms=self.rng.randint(1, max_vms),
-                priority=self.rng.randint(1, _MAX_PRI),
+                priority=self.rng.randint(1, max_priority),
                 work_s=self.rng.expovariate(1.0 / mean_work_s) + 60.0,
                 ckpt_period_s=ckpt_period_s,
                 boot_s=boot_s, restore_s=restore_s)

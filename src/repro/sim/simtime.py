@@ -262,6 +262,15 @@ class SimClock:
             while not self._closed and self._now < deadline:
                 self._cond.wait(self._POLL_CAP_S)
 
+    def pending_deadlines(self) -> Tuple[float, ...]:
+        """Sorted snapshot of the live waiter deadlines. Introspection
+        for tests: "is some thread pinned in a long virtual sleep?" can
+        be answered directly instead of being inferred from wall-time
+        thread scheduling (which is racy on a loaded machine)."""
+        with self._cond:
+            return tuple(sorted(d for d, seq in self._waiters
+                                if seq not in self._dead))
+
     def _prune(self) -> None:
         while self._waiters and self._waiters[0][1] in self._dead:
             self._dead.discard(heapq.heappop(self._waiters)[1])

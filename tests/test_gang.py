@@ -11,6 +11,7 @@ simulated fabric, and aborts all-or-nothing under rank-scoped store
 faults, partitions, and stragglers — the previous committed image always
 survives.
 """
+import time
 import types
 
 import numpy as np
@@ -236,17 +237,34 @@ def test_straggler_exhausts_ack_retries_and_aborts():
     try:
         active_clock().sleep(1.0)
         h.coord.snapshot(1)
+        rank = h.app.ranks[3]
         hid = h.vms[3].host.host_id
-        # degrade rank 3 and give it time to ENTER the 5s slowed
-        # iteration — once inside it cannot ack the pause within the
-        # 1.1s ack budget (a degrade armed at quiesce entry would land
-        # too late: the rank checks the pause flag before each sleep)
         h.sim.degrade_host(hid, 100.0)
-        active_clock().sleep(1.0)
+        # wall-poll (never a virtual sleep) until rank 3 is pinned INSIDE
+        # its 5s slowed iteration: that sleep's deadline is the only one
+        # that can sit >2 virtual seconds out (fast ranks iterate at
+        # 0.05s, quiesce polls at <=1.0s). A virtual sleep here raced
+        # wall scheduling — the pause could land near the slowed sleep's
+        # END, where the rank wakes within the 1.3s ack budget and acks.
+        clock = active_clock()
+        deadline = time.monotonic() + 30
+        while not any(d > clock.now() + 2.0
+                      for d in clock.pending_deadlines()):
+            assert time.monotonic() < deadline, \
+                "degraded rank never entered its slowed iteration"
+            time.sleep(0.001)
         with pytest.raises(GangStragglerError):
             h.coord.snapshot(2)
         assert h.coord.last_abort_reason == "straggler"
         h.sim.degrade_host(hid, 1.0)
+        # the straggler is still inside its stale 5s sleep (the abort
+        # budget is shorter than the sleep); wait for it to wake and
+        # iterate at full speed before asking for the healed epoch
+        it0 = rank.iteration
+        deadline = time.monotonic() + 30
+        while rank.iteration <= it0:
+            assert time.monotonic() < deadline, "rank 3 never resumed"
+            time.sleep(0.001)
         h.coord.snapshot(3)                    # healed: commits again
         assert list_steps(h.store, "apps/j") == [1, 3]
         assert h.coord.stats()["aborts"] == 1

@@ -1,6 +1,7 @@
 """Serving engine + CACS-hosted serving: suspend/resume mid-generation must
 not change the generated token stream."""
 import dataclasses
+import threading
 import time
 
 import jax
@@ -13,9 +14,51 @@ from repro.clusters import SnoozeBackend
 from repro.configs import get_config, reduced
 from repro.core import ASR, CACSService, CheckpointPolicy, CoordState
 from repro.models import build_model
+from repro.obs.telemetry import registry
 from repro.serve.engine import Engine, ServeApp
+from repro.sim.simtime import active_clock
 
 CFG = dataclasses.replace(reduced(get_config("repro-100m")), dtype="float32")
+
+
+class _FlakyServe(ServeApp):
+    """ServeApp whose decode raises once ``fail_at`` tokens exist."""
+
+    def __init__(self, *args, fail_at=4, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._fail_at = fail_at
+
+    def _build(self):
+        super()._build()
+        real = self.engine.decode
+
+        def decode(cache, token, pos):
+            if self.generated >= self._fail_at:
+                raise RuntimeError("chaos: device lost mid-decode")
+            return real(cache, token, pos)
+        self.engine.decode = decode
+
+
+class _GatedServe(ServeApp):
+    """ServeApp whose decode parks on a wall event while it holds the
+    donated cache — reproduces the surrendered-slot window at will."""
+
+    def __init__(self, *args, gate_at=2, **kwargs):
+        super().__init__(*args, **kwargs)
+        self._gate_at = gate_at
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def _build(self):
+        super()._build()
+        real = self.engine.decode
+
+        def decode(cache, token, pos):
+            if self.generated >= self._gate_at and not self.release.is_set():
+                self.entered.set()
+                self.release.wait(30)
+            return real(cache, token, pos)
+        self.engine.decode = decode
 
 
 @pytest.fixture(autouse=True)
@@ -88,3 +131,83 @@ def test_serve_app_suspend_resume_token_stream_unchanged():
                                       ref_tokens)
     finally:
         svc.shutdown()
+
+
+def test_decode_failure_restores_cache_and_flips_health():
+    """Regression: a decode exception used to leave the donated-cache slot
+    None forever — every later capture (suspend, snapshot) deadlocked and
+    healthy() stayed True on a dead loop."""
+    before = registry().value("serve.decode_failures", 0.0)
+    app = _FlakyServe(CFG, batch=1, prompt_len=8, n_tokens=24, cache_len=40,
+                      fail_at=3)
+    app.start(None, None)
+    app._thread.join(timeout=30)
+    assert not app._thread.is_alive(), "decode thread should have died"
+    assert app.healthy() is False
+    assert app.cache is not None, "donated slot must be restored on failure"
+    # capture still works (swap-out after the fault), without deadlock
+    state = app.checkpoint_state()
+    assert state["generated"] == 3
+    assert state["tokens_out"].shape == (1, 3)
+    assert registry().value("serve.decode_failures", 0.0) == before + 1
+    assert app.stop() is False
+
+
+def test_capture_blocks_without_advancing_virtual_time(sim_clock,
+                                                       monkeypatch):
+    """Regression: _capture busy-polled ``clock.sleep(0.001)`` while a
+    decode held the donated cache — on a SimClock each poll jumped virtual
+    time forward, re-timing every pending deadline in the process. The
+    capture thread must never sleep on the installed clock (spied on
+    directly: daemons leaked by earlier tests may legitimately advance the
+    shared clock, so a now()-didn't-move assertion would be flaky)."""
+    app = _GatedServe(CFG, batch=1, prompt_len=8, n_tokens=24, cache_len=40,
+                      gate_at=2)
+    app.start(None, None)
+    try:
+        assert app.entered.wait(30), "decode never reached the gate"
+        clock = active_clock()
+        sleeper_idents = []
+        real_sleep = clock.sleep
+
+        def spy(dt):
+            sleeper_idents.append(threading.get_ident())
+            return real_sleep(dt)
+        monkeypatch.setattr(clock, "sleep", spy)
+        got = {}
+
+        def grab():
+            got["state"] = app.checkpoint_state()
+        t = threading.Thread(target=grab, daemon=True)
+        t.start()
+        time.sleep(0.3)          # wall time: capture must still be pinned
+        assert t.is_alive(), "capture returned during the donated window"
+        app.release.set()
+        t.join(timeout=30)
+        assert not t.is_alive()
+        assert got["state"]["generated"] >= 2
+        assert t.ident not in sleeper_idents, \
+            "capture slept on the installed clock during the donated window"
+    finally:
+        app.release.set()
+        app.stop()
+
+
+def test_stop_timeout_counts_leaked_decode_thread():
+    """Regression: stop() joined with a timeout and returned regardless —
+    a wedged decode thread leaked silently. It must be detected, counted
+    in serve.stop_timeouts (with the last error as note) and reported."""
+    before = registry().value("serve.stop_timeouts", 0.0)
+    app = _GatedServe(CFG, batch=1, prompt_len=8, n_tokens=24, cache_len=40,
+                      gate_at=2)
+    app.start(None, None)
+    try:
+        assert app.entered.wait(30), "decode never reached the gate"
+        leaked = app.stop(join_s=0.2)
+        assert leaked is True
+        assert registry().value("serve.stop_timeouts", 0.0) == before + 1
+    finally:
+        app.release.set()
+        app._thread.join(timeout=30)
+    assert not app._thread.is_alive()
+    assert app.stop() is False
